@@ -1,0 +1,59 @@
+"""Fig 19a — IoT sequence pipeline vs xAFCL / XFaaS.
+
+Paper claims: at length 10, Jointλ ≥2.5× faster than both; the gap grows
+with pipeline length (cross-cloud transfers through the central node).
+"""
+
+from __future__ import annotations
+
+from repro.backends.simcloud import SimCloud, Workload
+from repro.baselines.xfaas import run_xfaas_sequence, xfaas_makespan_ms
+
+from benchmarks import common as c
+
+
+def run(lengths=(1, 2, 4, 6, 8, 10), n: int = 12, verbose: bool = True):
+    rows = []
+    for ln in lengths:
+        jl_ms, _ = c.jointlambda_run(c.iot_spec(ln), n)
+        xa_ms, _, _ = c.xafcl_run(c.iot_spec(ln), n)
+        # XFaaS: same linear chain through per-cloud services + connectors
+        sim = SimCloud(seed=0)
+        stages = [(c.AWS_CPU if i % 2 == 0 else c.ALI_CPU,
+                   Workload(fixed_ms=c.IOT_FN_MS, fn=lambda x: c.IOT_MSG))
+                  for i in range(ln)]
+        runs = [run_xfaas_sequence(sim, stages, 0, t=i * 6000.0)
+                for i in range(n)]
+        sim.run()
+        xf_ms = [xfaas_makespan_ms(sim, r) for r in runs]
+        r = {"length": ln,
+             "jointlambda_p95_ms": c.p95(jl_ms),
+             "xafcl_p95_ms": c.p95(xa_ms),
+             "xfaas_p95_ms": c.p95(xf_ms)}
+        r["speedup_vs_xafcl"] = r["xafcl_p95_ms"] / r["jointlambda_p95_ms"]
+        r["speedup_vs_xfaas"] = r["xfaas_p95_ms"] / r["jointlambda_p95_ms"]
+        rows.append(r)
+        if verbose:
+            print(f"[fig19a] len={ln:2d}: Jointλ {r['jointlambda_p95_ms']:7.1f}ms"
+                  f" | xAFCL {r['xafcl_p95_ms']:7.1f}ms"
+                  f" ({r['speedup_vs_xafcl']:.2f}×)"
+                  f" | XFaaS {r['xfaas_p95_ms']:7.1f}ms"
+                  f" ({r['speedup_vs_xfaas']:.2f}×)")
+    if verbose:
+        last = rows[-1]
+        print(f"[fig19a] paper: ≥2.5× vs both at len 10 — got "
+              f"{last['speedup_vs_xafcl']:.2f}× / {last['speedup_vs_xfaas']:.2f}×")
+    return rows
+
+
+def main():
+    rows = run()
+    for r in rows:
+        print(c.fmt_row(f"fig19a_iot_len{r['length']}_jointlambda",
+                        r["jointlambda_p95_ms"] * 1e3,
+                        f"vs_xafcl={r['speedup_vs_xafcl']:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Kernel micro-bench: Pallas (interpret) vs pure-jnp oracle on CPU.
+
+CPU-interpret timings are CORRECTNESS artifacts, not TPU performance — the
+TPU roofline for the kernels is structural (BlockSpec working sets, MXU
+alignment; see DESIGN.md).  What this bench contributes: the jnp-oracle
+timing trend across shapes (the dry-run's compute baseline) and a regression
+guard that interpret-mode kernels stay numerically tied to their oracles.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(verbose: bool = True):
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    for (b, l, h, hkv, hd) in [(1, 512, 8, 4, 64), (1, 1024, 8, 2, 128)]:
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (b, l, h, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (b, l, hkv, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (b, l, hkv, hd), jnp.float32)
+        t_ref = _time(jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v)),
+                      q, k, v)
+        err = float(jnp.max(jnp.abs(
+            ops.flash_attention(q, k, v, block_q=256, block_k=256)
+            - ref.flash_attention_ref(q, k, v))))
+        rows.append(("flash_attention", f"L{l}_h{h}kv{hkv}hd{hd}", t_ref, err))
+
+    for (bt, l, h, p, n, chunk) in [(1, 512, 4, 64, 128, 128)]:
+        ks = jax.random.split(key, 4)
+        x = jax.random.normal(ks[0], (bt, l, h, p), jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (bt, l, h)))
+        a = -jnp.exp(jnp.linspace(0.0, 2.0, h))
+        bm = jax.random.normal(ks[2], (bt, l, n), jnp.float32)
+        cm = jax.random.normal(ks[3], (bt, l, n), jnp.float32)
+        t_ref = _time(jax.jit(lambda *xs: ref.ssd_scan_ref(*xs, chunk)),
+                      x, dt, a, bm, cm)
+        err = float(jnp.max(jnp.abs(ops.ssd_scan(x, dt, a, bm, cm, chunk=chunk)
+                                    - ref.ssd_scan_ref(x, dt, a, bm, cm, chunk))))
+        rows.append(("ssd_scan", f"L{l}_h{h}p{p}n{n}", t_ref, err))
+
+    for (bt, l, w) in [(1, 1024, 256)]:
+        ks = jax.random.split(key, 2)
+        la = -jax.nn.softplus(jax.random.normal(ks[0], (bt, l, w)))
+        bb = jax.random.normal(ks[1], (bt, l, w)) * 0.1
+        t_ref = _time(jax.jit(ref.rglru_scan_ref), la, bb)
+        err = float(jnp.max(jnp.abs(ops.rglru_scan(la, bb)
+                                    - ref.rglru_scan_ref(la, bb))))
+        rows.append(("rglru_scan", f"L{l}_w{w}", t_ref, err))
+
+    if verbose:
+        for name, shape, t_ref, err in rows:
+            print(f"[kernels] {name:16s} {shape:20s} oracle {t_ref:9.1f}µs"
+                  f"  max|Δ|={err:.2e}")
+    return rows
+
+
+def main():
+    rows = run()
+    for name, shape, t_ref, err in rows:
+        print(f"kernel_{name}_{shape},{t_ref:.1f},maxerr={err:.2e}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

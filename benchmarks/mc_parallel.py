@@ -1,0 +1,60 @@
+"""Fig 19b — Monte-Carlo parallel-aggregate vs xAFCL / Lithops.
+
+Paper claims: −22% vs xAFCL and −77% vs Lithops at 16 branches; 2.1× and
+4.0× at 128 branches (centralized dispatch bottleneck limits branch scaling).
+"""
+
+from __future__ import annotations
+
+from repro.backends.simcloud import SimCloud, Workload
+from repro.baselines.lithops import (charge_driver_vm, lithops_makespan_ms,
+                                     run_lithops_map)
+
+from benchmarks import common as c
+
+
+def run(branches=(16, 32, 64, 128), n: int = 8, verbose: bool = True):
+    rows = []
+    for k in branches:
+        jl_ms, jl_sim = c.jointlambda_run(c.mc_spec(k), n, input_value=k,
+                                          spacing_ms=20_000.0)
+        xa_ms, xa_sim, _ = c.xafcl_run(c.mc_spec(k), n, input_value=k,
+                                       spacing_ms=20_000.0)
+        sim = SimCloud(seed=0)
+        runs = [run_lithops_map(sim, c.ALI_CPU,
+                                Workload(compute_ms=c.MC_PROC_MS, fn=lambda x: 0.785),
+                                k, agg=Workload(compute_ms=c.MC_AGG_MS,
+                                                fn=lambda xs: 3.14),
+                                t=i * 20_000.0)
+                for i in range(n)]
+        sim.run()
+        li_ms = [lithops_makespan_ms(sim, r) for r in runs]
+        r = {"branches": k,
+             "jointlambda_p95_ms": c.p95(jl_ms),
+             "xafcl_p95_ms": c.p95(xa_ms),
+             "lithops_p95_ms": c.p95(li_ms)}
+        r["speedup_vs_xafcl"] = r["xafcl_p95_ms"] / r["jointlambda_p95_ms"]
+        r["speedup_vs_lithops"] = r["lithops_p95_ms"] / r["jointlambda_p95_ms"]
+        rows.append(r)
+        if verbose:
+            print(f"[fig19b] N={k:3d}: Jointλ {r['jointlambda_p95_ms']:7.1f}ms"
+                  f" | xAFCL {r['xafcl_p95_ms']:7.1f}ms"
+                  f" ({r['speedup_vs_xafcl']:.2f}×)"
+                  f" | Lithops {r['lithops_p95_ms']:7.1f}ms"
+                  f" ({r['speedup_vs_lithops']:.2f}×)")
+    if verbose:
+        print("[fig19b] paper: 1.22×/4.3× at N=16 → 2.1×/4.0× at N=128")
+    return rows
+
+
+def main():
+    rows = run()
+    for r in rows:
+        print(c.fmt_row(f"fig19b_mc_n{r['branches']}_jointlambda",
+                        r["jointlambda_p95_ms"] * 1e3,
+                        f"vs_xafcl={r['speedup_vs_xafcl']:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

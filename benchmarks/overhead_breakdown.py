@@ -1,0 +1,71 @@
+"""Fig 20 — decomposed Jointλ orchestration overhead (phase traces).
+
+Paper claims: sequence mode — checkpoint W&R ≈48.5% of the Jointλ runtime
+(3W1R datastore ops per function); map mode (fan-out 32) — async invocation
+≈68% of runtime (grouped checkpoints, 5W1R); fan-in adds coordination-point
+W&R (2W2R).
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+
+from benchmarks import common as c
+
+
+def _phases(sim, fn_name: str):
+    agg = defaultdict(float)
+    n = 0
+    for r in sim.records:
+        if r.function == fn_name and r.status == "done":
+            n += 1
+            for k, v in r.phase_breakdown().items():
+                agg[k] += v
+    return {k: v / max(n, 1) for k, v in agg.items()}, n
+
+
+def run(verbose: bool = True):
+    rows = []
+    # sequence function: middle hop of the IoT pipeline (AWS→Ali cross-cloud)
+    _, sim = c.jointlambda_run(c.iot_spec(4), n=10)
+    seq, _ = _phases(sim, "f1")
+    # map + fan-in functions: MC with fan-out 32
+    _, sim2 = c.jointlambda_run(c.mc_spec(32), n=6, input_value=32,
+                                spacing_ms=20_000.0)
+    mp, _ = _phases(sim2, "data_map")
+    fi, _ = _phases(sim2, "data_process")
+
+    def summarize(name, ph, paper_note):
+        runtime = sum(v for k, v in ph.items() if k not in ("user_exec", "_end"))
+        ckpt = ph.get("output_ckp", 0) + ph.get("ivk_ckp", 0)
+        ivk = ph.get("invoke", 0)
+        coord = ph.get("coordination", 0)
+        r = {"mode": name, "runtime_ms": runtime,
+             "ckpt_ms": ckpt, "ckpt_share": ckpt / runtime if runtime else 0,
+             "invoke_ms": ivk, "invoke_share": ivk / runtime if runtime else 0,
+             "coordination_ms": coord,
+             "coordination_share": coord / runtime if runtime else 0,
+             "phases": dict(ph)}
+        if verbose:
+            print(f"[fig20] {name:8s}: runtime {runtime:6.1f}ms | ckpt W&R "
+                  f"{r['ckpt_share']*100:4.1f}% | async invoke "
+                  f"{r['invoke_share']*100:4.1f}% | coordination "
+                  f"{r['coordination_share']*100:4.1f}%  ({paper_note})")
+        return r
+
+    rows.append(summarize("sequence", seq, "paper: ckpt W&R ≈48.5%"))
+    rows.append(summarize("map", mp, "paper: async invocation ≈68%"))
+    rows.append(summarize("fan-in", fi, "paper: + coordination 2W2R"))
+    return rows
+
+
+def main():
+    rows = run()
+    for r in rows:
+        print(c.fmt_row(f"fig20_{r['mode']}_runtime", r["runtime_ms"] * 1e3,
+                        f"ckpt_share={r['ckpt_share']:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Fig 16 — QA (BERT) inference: latency + cost vs ASF / AC.
+
+Paper claims: Jointλ 2.6×/3.3× faster than AC/ASF; 63%/65% cheaper
+(heterogeneity win: BERT on Ali FC GPU, Fig 1's 15× anchor).
+"""
+
+from __future__ import annotations
+
+from benchmarks import common as c
+
+
+def run(n: int = 12, verbose: bool = True):
+    jl_ms, jl_sim = c.jointlambda_run(c.qa_spec("joint"), n)
+    asf_ms, asf_sim = c.statemachine_run(c.qa_spec("aws"), "aws", n)
+    ac_ms, ac_sim = c.statemachine_run(c.qa_spec("aliyun"), "aliyun", n)
+    r = {
+        "jointlambda_p95_ms": c.p95(jl_ms),
+        "asf_p95_ms": c.p95(asf_ms),
+        "ac_p95_ms": c.p95(ac_ms),
+        "speedup_vs_asf": c.p95(asf_ms) / c.p95(jl_ms),
+        "speedup_vs_ac": c.p95(ac_ms) / c.p95(jl_ms),
+        "jl_cost_per_wf": jl_sim.bill.total / n,
+        "asf_cost_per_wf": asf_sim.bill.total / n,
+        "ac_cost_per_wf": ac_sim.bill.total / n,
+    }
+    r["cost_saving_vs_asf"] = 1 - r["jl_cost_per_wf"] / r["asf_cost_per_wf"]
+    r["cost_saving_vs_ac"] = 1 - r["jl_cost_per_wf"] / r["ac_cost_per_wf"]
+    if verbose:
+        print(f"[fig16] QA: Jointλ {r['jointlambda_p95_ms']:.0f}ms | "
+              f"ASF {r['asf_p95_ms']:.0f}ms ({r['speedup_vs_asf']:.2f}×, "
+              f"paper 3.3×) | AC {r['ac_p95_ms']:.0f}ms "
+              f"({r['speedup_vs_ac']:.2f}×, paper 2.6×) | cost "
+              f"−{r['cost_saving_vs_asf']*100:.0f}% vs ASF (paper 65%), "
+              f"−{r['cost_saving_vs_ac']*100:.0f}% vs AC (paper 63%)")
+    return [r]
+
+
+def main():
+    rows = run()
+    r = rows[0]
+    print(c.fmt_row("fig16_qa_jointlambda", r["jointlambda_p95_ms"] * 1e3,
+                    f"speedup_vs_asf={r['speedup_vs_asf']:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

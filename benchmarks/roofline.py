@@ -1,0 +1,121 @@
+"""§Roofline — the three-term roofline table from the dry-run artifacts.
+
+Reads ``results/dryrun.json`` (written by ``repro.launch.dryrun``) and prints
+per (arch × shape × mesh): compute/memory/collective seconds, the dominant
+term, MODEL_FLOPS/HLO_FLOPs, peak HBM per device, and the roofline fraction.
+
+``--compare`` prints baseline-vs-variant rows for the hillclimbed cells
+(§Perf iteration log).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT = "results/dryrun.json"
+
+
+def load(path: str = DEFAULT) -> dict:
+    if not os.path.exists(path):
+        print(f"[roofline] no {path}; run `python -m repro.launch.dryrun --all`",
+              file=sys.stderr)
+        return {}
+    with open(path) as f:
+        return json.load(f)
+
+
+def table(data: dict, *, mesh: str = "16x16", variant: str = "baseline",
+          verbose: bool = True):
+    rows = []
+    for key, r in sorted(data.items()):
+        if r.get("mesh") != mesh or r.get("variant", "baseline") != variant:
+            continue
+        if r.get("skip"):
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "skip": r["skip"]})
+            continue
+        if not r.get("ok"):
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "error": r.get("error", "?")[:80]})
+            continue
+        rl = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "compute_ms": rl["compute_s"] * 1e3,
+            "memory_ms": rl["memory_s"] * 1e3,
+            "collective_ms": rl["collective_s"] * 1e3,
+            "dominant": rl["dominant"],
+            "useful": rl["useful_flops_ratio"],
+            "fraction": rl["roofline_fraction"],
+            "peak_gib": r["memory"]["peak_bytes"] / 2**30,
+        })
+    if verbose:
+        print(f"[roofline] mesh={mesh} variant={variant}")
+        hdr = (f"  {'arch':22s}{'shape':12s}{'compute':>9s}{'memory':>9s}"
+               f"{'coll':>9s}  {'dominant':10s}{'useful':>7s}{'frac':>6s}"
+               f"{'GiB/dev':>8s}")
+        print(hdr)
+        for r in rows:
+            if "skip" in r:
+                print(f"  {r['arch']:22s}{r['shape']:12s}  SKIP: {r['skip'][:60]}")
+            elif "error" in r:
+                print(f"  {r['arch']:22s}{r['shape']:12s}  ERROR: {r['error']}")
+            else:
+                print(f"  {r['arch']:22s}{r['shape']:12s}"
+                      f"{r['compute_ms']:8.1f}ms{r['memory_ms']:8.1f}ms"
+                      f"{r['collective_ms']:8.1f}ms  {r['dominant']:10s}"
+                      f"{r['useful']:7.2f}{r['fraction']:6.3f}"
+                      f"{r['peak_gib']:8.2f}")
+    return rows
+
+
+def compare(data: dict, *, verbose: bool = True):
+    """§Perf: baseline vs every recorded variant, grouped by cell."""
+    cells = {}
+    for key, r in data.items():
+        if r.get("skip") or not r.get("ok"):
+            continue
+        cells.setdefault((r["arch"], r["shape"], r["mesh"]), []).append(r)
+    out = []
+    for (arch, shape, mesh), rs in sorted(cells.items()):
+        if len(rs) < 2:
+            continue
+        rs.sort(key=lambda r: (r["variant"] != "baseline", r["variant"]))
+        if verbose:
+            print(f"[perf] {arch} × {shape} on {mesh}")
+        base = rs[0]["roofline"]
+        for r in rs:
+            rl = r["roofline"]
+            dom0 = base["dominant"]
+            delta = (1 - rl[f"{dom0}_s"] / base[f"{dom0}_s"]) * 100 \
+                if base[f"{dom0}_s"] else 0.0
+            if verbose:
+                print(f"    {r['variant']:50s} compute {rl['compute_s']*1e3:8.1f}ms"
+                      f" | mem {rl['memory_s']*1e3:9.1f}ms"
+                      f" | coll {rl['collective_s']*1e3:8.1f}ms"
+                      f" | frac {rl['roofline_fraction']:.3f}"
+                      f" | Δdom {delta:+.1f}%"
+                      f" | peak {r['memory']['peak_bytes']/2**30:.1f} GiB")
+            out.append({"arch": arch, "shape": shape, "mesh": mesh,
+                        "variant": r["variant"], **rl})
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", default=DEFAULT)
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--compare", action="store_true")
+    args = ap.parse_args()
+    data = load(args.path)
+    if args.compare:
+        return compare(data)
+    return table(data, mesh=args.mesh, variant=args.variant)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark aggregator — one module per paper table/figure.
+
+Prints a ``name,us_per_call,derived`` CSV line per measurement plus the
+human-readable summaries each module emits.  The §Roofline/§Perf tables read
+``results/dryrun.json`` (produced by ``repro.launch.dryrun --all``).
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> int:
+    failures = 0
+    modules = [
+        ("fig15 video analytics", "benchmarks.video_analytics"),
+        ("fig16 qa inference", "benchmarks.qa_inference"),
+        ("fig18 failover", "benchmarks.failover"),
+        ("fig19a iot sequence", "benchmarks.iot_sequence"),
+        ("fig19b mc parallel", "benchmarks.mc_parallel"),
+        ("fig20 overhead breakdown", "benchmarks.overhead_breakdown"),
+        ("table3 cost", "benchmarks.cost_table"),
+        ("kernels", "benchmarks.kernel_bench"),
+    ]
+    for title, modname in modules:
+        print(f"\n===== {title} ({modname}) =====")
+        try:
+            mod = __import__(modname, fromlist=["main"])
+            mod.main()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+
+    print("\n===== roofline (from results/dryrun.json) =====")
+    try:
+        from benchmarks import roofline
+        data = roofline.load()
+        if data:
+            roofline.table(data, mesh="16x16")
+            roofline.table(data, mesh="2x16x16")
+            print("\n----- §Perf variants -----")
+            roofline.compare(data)
+    except Exception:
+        failures += 1
+        traceback.print_exc()
+    print(f"\nbenchmarks done; {failures} module failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

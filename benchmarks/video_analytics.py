@@ -1,0 +1,57 @@
+"""Fig 15 — Video Analytics: P95 latency + cost vs ASF / AC.
+
+Paper claims: Jointλ −21%/−26% latency vs ASF/AC at fan-out 8
+(−21%/−43% at fan-out 4); ≥48% cost saving; orchestration ≥75% of
+ASF/AC total cost vs ≈44% for Jointλ.
+"""
+
+from __future__ import annotations
+
+from benchmarks import common as c
+
+
+def run(fanouts=(4, 8), n: int = 12, verbose: bool = True):
+    rows = []
+    for k in fanouts:
+        jl_ms, jl_sim = c.jointlambda_run(c.video_spec(k, "joint"), n)
+        asf_ms, asf_sim = c.statemachine_run(c.video_spec(k, "aws"), "aws", n)
+        ac_ms, ac_sim = c.statemachine_run(c.video_spec(k, "aliyun"), "aliyun", n)
+        r = {
+            "fanout": k,
+            "jointlambda_p95_ms": c.p95(jl_ms),
+            "asf_p95_ms": c.p95(asf_ms),
+            "ac_p95_ms": c.p95(ac_ms),
+            "jl_cost_per_wf": jl_sim.bill.total / n,
+            "asf_cost_per_wf": asf_sim.bill.total / n,
+            "ac_cost_per_wf": ac_sim.bill.total / n,
+            "jl_orch_share": jl_sim.bill.orchestration_cost / jl_sim.bill.total,
+            "asf_orch_share": asf_sim.bill.orchestration_cost / asf_sim.bill.total,
+            "ac_orch_share": ac_sim.bill.orchestration_cost / ac_sim.bill.total,
+        }
+        r["speedup_vs_asf"] = r["asf_p95_ms"] / r["jointlambda_p95_ms"]
+        r["speedup_vs_ac"] = r["ac_p95_ms"] / r["jointlambda_p95_ms"]
+        r["cost_saving_vs_asf"] = 1 - r["jl_cost_per_wf"] / r["asf_cost_per_wf"]
+        r["cost_saving_vs_ac"] = 1 - r["jl_cost_per_wf"] / r["ac_cost_per_wf"]
+        rows.append(r)
+        if verbose:
+            print(f"[fig15] fanout={k}: Jointλ {r['jointlambda_p95_ms']:.0f}ms "
+                  f"| ASF {r['asf_p95_ms']:.0f}ms ({r['speedup_vs_asf']:.2f}×) "
+                  f"| AC {r['ac_p95_ms']:.0f}ms ({r['speedup_vs_ac']:.2f}×) "
+                  f"| cost −{r['cost_saving_vs_asf']*100:.0f}%/−"
+                  f"{r['cost_saving_vs_ac']*100:.0f}% "
+                  f"| orch share JL {r['jl_orch_share']*100:.0f}% "
+                  f"vs ASF {r['asf_orch_share']*100:.0f}%")
+    return rows
+
+
+def main():
+    rows = run()
+    for r in rows:
+        print(c.fmt_row(f"fig15_video_fanout{r['fanout']}_jointlambda",
+                        r["jointlambda_p95_ms"] * 1e3,
+                        f"speedup_vs_asf={r['speedup_vs_asf']:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

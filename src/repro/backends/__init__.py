@@ -1,0 +1,12 @@
+"""Backend-Shim substrate: the compatibility layer of Jointλ (paper §3.2).
+
+Exposes:
+  * ``shim``        — effect objects + DSBackend/FaaSBackend abstract APIs (Table 2)
+  * ``datastore``   — strongly-consistent KV/table/object stores (pure state machine)
+  * ``simcloud``    — deterministic discrete-event Jointcloud simulator
+  * ``billing``     — GB·s / per-op / egress / state-transition / VM-hour accounting
+  * ``calibration`` — every latency & price constant, sourced from the paper
+  * ``localjax``    — real-execution backend (workflow nodes run as JAX calls)
+"""
+
+from repro.backends import calibration, shim  # noqa: F401

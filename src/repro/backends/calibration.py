@@ -1,0 +1,151 @@
+"""Every latency / price constant used by SimCloud, in one place.
+
+Sources (all from the Jointλ paper unless noted):
+  * §5.4 "Cost": table-store pricing — $1.4269 per 1M writes, $0.285 per 1M
+    reads (the max of DynamoDB / TableStore pricing the paper bills with).
+  * §2.2 / §5.2: external state-machine orchestrators charge $25 per 1M state
+    transitions.
+  * Table 3: VM hourly prices — m6g.8xlarge $1.584/h, m6g.4xlarge $0.792/h,
+    m6g.2xlarge $0.396/h.
+  * §4.3.1: async request payload hard quotas — 256 KB (AWS Lambda),
+    128 KB (AliYun FC).
+  * §5.3: failover overhead ≈ 78 ms (client creation + one extra cross-cloud
+    invocation); failover extra cost $0.501 per 1M invocations.
+  * §5.4: Lithops worker runtime initialisation ≈ 500 ms.
+  * §2.1 Fig 1: BERT inference ≈ 7× (batch 2) and 15× (batch 4) faster on
+    GPU-FaaS than CPU-FaaS — used to calibrate flavor speed ratios.
+  * Public list prices (2024) for Lambda / FC GB·s rates; values only need to
+    be *relatively* right for the cost conclusions to reproduce.
+
+All times are in **milliseconds** of virtual clock; all prices in USD.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+MS = 1.0
+SEC = 1000.0
+
+# --------------------------------------------------------------------------
+# Datastore (managed NoSQL table store — DynamoDB / TableStore class)
+# --------------------------------------------------------------------------
+TABLE_WRITE_PRICE = 1.4269e-6     # $ per write            (paper §5.4)
+TABLE_READ_PRICE = 0.285e-6      # $ per strongly-consistent read
+TABLE_WRITE_MS = 4.0            # same-cloud conditional-write latency
+TABLE_READ_MS = 2.5            # same-cloud strong read latency
+OBJECT_WRITE_MS = 12.0           # object store (S3/OSS class) PUT
+OBJECT_READ_MS = 9.0            # object store GET
+OBJECT_PRICE_PER_GB_MO = 0.023   # storage; negligible for workflow lifetimes
+
+# --------------------------------------------------------------------------
+# FaaS invocation path
+# --------------------------------------------------------------------------
+INVOKE_API_MS = 6.0              # control-plane accept latency (warm, same cloud)
+ASYNC_QUEUE_MS = 18.0            # async queue dwell before execution starts
+CLIENT_CREATE_MS = 28.0          # SDK client construction (dominates failover)
+INVOKE_TIMEOUT_MS = 250.0        # error detection when a FaaS system is down
+COLD_START_MS = 450.0            # unused in benches (paper pre-warms) but modelled
+INVOKE_PRICE = 0.20e-6           # $ per request (Lambda list price)
+RETRY_BACKOFF_MS = 1000.0        # FaaS at-least-once retry backoff
+MAX_RETRIES = 2                  # async invoke retry budget (Lambda default)
+
+# Payload hard quotas for async invocation (paper §4.3.1)
+PAYLOAD_QUOTA = {"aws": 256 * 1024, "aliyun": 128 * 1024}
+DEFAULT_PAYLOAD_QUOTA = 128 * 1024
+
+# --------------------------------------------------------------------------
+# Network
+# --------------------------------------------------------------------------
+INTRA_CLOUD_RTT_MS = 1.0         # same cloud, same region
+# AWS ap-northeast-1 ↔ AliYun ap-north-1: geographically adjacent metros.
+# Calibrated against §5.3: failover ≈ 78 ms = client create (28) + one extra
+# cross-cloud invocation + B1's cross-cloud checkpoint ops — only holds for
+# RTT ≈ 16 ms.
+INTER_CLOUD_SAME_REGION_RTT_MS = 16.0
+# VM-hosted middleware (xAFCL / Lithops driver) reaches FaaS through public
+# endpoints, not in-VPC APIs: extra per-call latency.
+PUBLIC_ENDPOINT_MS = 28.0
+INTER_CLOUD_CROSS_REGION_RTT_MS = 120.0  # e.g. ap-northeast-1 ↔ us-west-1
+EGRESS_PRICE_PER_GB = 0.09       # $/GB leaving a cloud
+BANDWIDTH_GBPS = 1.0             # per-flow cross-cloud throughput
+
+# --------------------------------------------------------------------------
+# Compute flavors (GB·s pricing + relative speed)
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Flavor:
+    """A FaaS compute flavor: pricing + a relative speed for compute-bound work.
+
+    ``speed`` scales the *compute* portion of a stage's reference duration:
+    ``duration = compute_ms / speed + fixed_ms``.  The paper's Fig 1 shows
+    GPU-FaaS 7–15× faster than CPU-FaaS on BERT; we calibrate ``speed``
+    accordingly.
+    """
+
+    name: str
+    price_per_gb_s: float
+    speed: float = 1.0
+    gpu: bool = False
+    memory_gb: float = 0.5        # default configured memory (512 MB, §5.3)
+
+
+CPU_AWS = Flavor("aws_cpu", price_per_gb_s=1.66667e-5, speed=1.0)
+# AliYun CPU slightly faster per Fig 1's platform spread (QA: AC beats ASF)
+CPU_ALIYUN = Flavor("ali_cpu", price_per_gb_s=1.63850e-5, speed=1.15)
+# GPU flavors bill against (GPU-seconds · virtual GB) — folded into one rate,
+# calibrated so GPU BERT costs ≈40% of aws_cpu BERT (Fig 2: 61.9% saving).
+GPU_ALIYUN_4G = Flavor("ali_gpu4", price_per_gb_s=2.0e-5, speed=7.0, gpu=True, memory_gb=4.0)
+GPU_ALIYUN_8G = Flavor("ali_gpu8", price_per_gb_s=1.25e-5, speed=15.0, gpu=True, memory_gb=8.0)
+
+# --------------------------------------------------------------------------
+# Centralized-orchestrator baselines
+# --------------------------------------------------------------------------
+STATE_TRANSITION_PRICE = 25e-6   # $ per state transition (ASF/AC, paper §2.2)
+ASF_TRANSITION_MS = 22.0         # managed state-machine transition latency
+# AC transitions slower, especially on parallel patterns ([108]; makes the
+# paper's video fig — AC worst at high fan-out — reproduce)
+AC_TRANSITION_MS = 45.0
+VM_PRICE = {                     # $/hour (paper Table 3)
+    "m6g.8xlarge": 1.584,
+    "m6g.4xlarge": 0.792,
+    "m6g.2xlarge": 0.396,
+}
+ORCH_VM = "m6g.8xlarge"          # xAFCL orchestrator node
+DS_VM = "m6g.4xlarge"            # xAFCL / Jointλ-VM datastore node
+LITHOPS_VM = "m6g.2xlarge"
+LITHOPS_WORKER_INIT_MS = 500.0   # §5.4: worker runtime initialisation
+XFAAS_TRANSITIONS_PER_HOP = 3    # §5.4: "3 state transitions at an invocation"
+
+# --------------------------------------------------------------------------
+# Jointλ runtime constants
+# --------------------------------------------------------------------------
+FANOUT_CHUNK = 10                # invocation-checkpoint grouping (paper Fig 8)
+FANOUT_THREADS = 10              # concurrent invocation threads (paper §4.1.2)
+WRAPPER_CPU_MS = 1.2             # wrapper bookkeeping (unwrap/wrap, naming)
+
+
+def default_jointcloud() -> dict:
+    """The two-cloud testbed of the paper: AWS + AliYun, same geographic region."""
+    return {
+        "clouds": {
+            "aws": {
+                "region": "ap-northeast-1",
+                "faas": {"lambda": CPU_AWS},
+                "tables": ["dynamodb"],
+                "objects": ["s3"],
+            },
+            "aliyun": {
+                "region": "ap-north-1",
+                "faas": {"fc": CPU_ALIYUN, "fc_gpu": GPU_ALIYUN_8G,
+                         "fc_gpu4": GPU_ALIYUN_4G},
+                "tables": ["tablestore"],
+                "objects": ["oss"],
+            },
+        },
+        "rtt_ms": {
+            ("aws", "aliyun"): INTER_CLOUD_SAME_REGION_RTT_MS,
+        },
+    }

@@ -1,0 +1,125 @@
+"""Strongly-consistent datastore state machines (DynamoDB / TableStore class).
+
+This module is the *pure* state layer: a linearizable key-value table with the
+conditional-create / append / bitmap primitives of Table 2.  Interpreters wrap
+it with latency and billing.  Linearizability falls out of the single-threaded
+event loop: every operation executes atomically at one point in virtual time.
+
+The paper's correctness argument (§4.1) leans on exactly two properties, both
+enforced here:
+  1. ``create_if_absent`` is atomic — duplicate executions cannot both create
+     an output checkpoint;
+  2. ``append_and_get_list`` is atomic read-modify-write — concurrent fan-out
+     groups see each other's committed invocations.
+"""
+
+from __future__ import annotations
+
+import copy
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Sequence
+
+
+@dataclass
+class TableState:
+    """One table/object-store namespace inside one cloud."""
+
+    name: str
+    items: Dict[str, Any] = field(default_factory=dict)
+    # op counters for billing / Fig-20 style breakdowns
+    writes: int = 0
+    reads: int = 0
+
+    # -- Table 2 primitives -------------------------------------------------
+
+    def create_if_absent(self, key: str, value: Any) -> bool:
+        """Atomic conditional create. True iff the key was absent."""
+        self.writes += 1
+        if key in self.items:
+            return False
+        self.items[key] = copy.deepcopy(value)
+        return True
+
+    def get(self, key: str) -> Any:
+        """Strongly-consistent read (returns a deep copy; None if absent)."""
+        self.reads += 1
+        val = self.items.get(key)
+        return copy.deepcopy(val)
+
+    def append_and_get_list(self, key: str, items: Sequence[Any]) -> List[Any]:
+        """Atomically append ``items`` to the list at ``key`` and return it.
+
+        Creates the list if absent (matches the create-then-append idiom in
+        Fig 8 being safe even if the create was lost to a crash).
+        """
+        self.writes += 1
+        cur = self.items.setdefault(key, [])
+        if not isinstance(cur, list):
+            raise TypeError(f"{self.name}[{key}] is not a list")
+        cur.extend(copy.deepcopy(list(items)))
+        return copy.deepcopy(cur)
+
+    def update_bitmap(self, index: int, key: str) -> List[bool]:
+        """Atomically set bit ``index`` and return the bitmap (strong read)."""
+        self.writes += 1
+        bm = self.items.get(key)
+        if bm is None:
+            raise KeyError(f"bitmap {key} not created")
+        bm[index] = True
+        return list(bm)
+
+    # -- GC support (§4.4) ----------------------------------------------------
+
+    def list_prefix(self, prefix: str) -> List[str]:
+        self.reads += 1
+        return sorted(k for k in self.items if k.startswith(prefix))
+
+    def delete(self, keys: Sequence[str]) -> int:
+        n = 0
+        for k in keys:
+            if k in self.items:
+                del self.items[k]
+                n += 1
+        self.writes += len(list(keys))
+        return n
+
+    # -- introspection ---------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self.items)
+
+
+class InMemoryDS:
+    """A concrete :class:`repro.backends.shim.DSBackend` over ``TableState``.
+
+    Used directly by the local (real-execution) backend and by unit tests;
+    SimCloud talks to ``TableState`` through its event loop instead.
+    """
+
+    def __init__(self, state: TableState | None = None):
+        self.state = state or TableState("local")
+
+    # Table 2 surface
+    def store_output_data(self, key: str, data: Any) -> bool:
+        return self.state.create_if_absent(key, data)
+
+    def get_value(self, key: str) -> Any:
+        return self.state.get(key)
+
+    def create_invocation_list(self, key: str) -> bool:
+        return self.state.create_if_absent(key, [])
+
+    def append_and_get_list(self, key: str, items: Sequence[Any]) -> list:
+        return self.state.append_and_get_list(key, items)
+
+    def create_bitmap(self, size: int, key: str) -> bool:
+        return self.state.create_if_absent(key, [False] * size)
+
+    def update_bitmap(self, index: int, key: str) -> list:
+        return self.state.update_bitmap(index, key)
+
+    def list_prefix(self, prefix: str) -> list:
+        return self.state.list_prefix(prefix)
+
+    def delete(self, keys: Sequence[str]) -> int:
+        return self.state.delete(keys)

@@ -1,0 +1,245 @@
+"""Backend-Shim: the distributed compatibility layer (paper §3.2, Table 2).
+
+The function-side orchestrator is written once as an *effect generator*: it
+``yield``s small effect objects describing datastore accesses and function
+invocations, and a backend interpreter executes them.  Two interpreters exist:
+
+  * :mod:`repro.backends.simcloud` — deterministic discrete-event Jointcloud
+    simulator (virtual clock, latency + billing models, failure injection);
+  * :mod:`repro.backends.localjax` — real in-process execution where workflow
+    nodes are actual (jitted) JAX calls.
+
+This mirrors the paper exactly: the orchestration *logic* is cloud-agnostic
+and every cloud interaction goes through the shim's Table-2 API surface:
+
+    DSBackend:   store_output_data, get_value, create_invocation_list,
+                 append_and_get_list, create_bitmap, update_bitmap
+    FaaSBackend: create, async_invoke
+
+Effects carry backend *ids* of the form ``"cloud/service"`` (e.g.
+``"aws/dynamodb"``, ``"aliyun/fc_gpu"``); resolution to a concrete client is
+the interpreter's job — user code and the orchestrator never see cloud SDKs.
+"""
+
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass, field
+from typing import Any, Callable, Generator, Optional, Sequence
+
+
+# ==========================================================================
+# Errors (the failure surface the failover path reacts to — paper Fig 10)
+# ==========================================================================
+
+
+class ShimError(Exception):
+    """Base class for errors surfaced to the orchestrator."""
+
+
+class InvocationError(ShimError):
+    """async_invoke failed (FaaS system down / network partition)."""
+
+
+class DataStoreError(ShimError):
+    """Datastore unreachable (its cloud is down)."""
+
+
+class PayloadTooLarge(ShimError):
+    """Direct-transfer payload exceeds the FaaS async quota (§4.3.1)."""
+
+
+# ==========================================================================
+# Effects
+# ==========================================================================
+
+
+@dataclass
+class Effect:
+    """Base effect. ``result`` semantics are documented per subclass."""
+
+
+# ---- DSBackend ops (Table 2) -------------------------------------------
+
+
+@dataclass
+class DsCreate(Effect):
+    """Conditionally create ``key`` := ``value`` (create-if-not-exists).
+
+    Backs ``store_output_data`` (value = output blob),
+    ``create_invocation_list`` (value = []) and ``create_bitmap``
+    (value = [False]*size).  Atomic.  Result: ``True`` iff created.
+    """
+
+    ds: str
+    key: str
+    value: Any
+    size_bytes: int = 0
+
+
+@dataclass
+class DsGet(Effect):
+    """Strongly-consistent read. Result: stored value or ``None``."""
+
+    ds: str
+    key: str
+
+
+@dataclass
+class DsAppendGetList(Effect):
+    """Atomically append ``items`` to the list at ``key`` and return it.
+
+    Matches ``append_and_get_list`` in Table 2 (invocation checkpoints and
+    ByBatch/ByRedundant coordination points).
+    """
+
+    ds: str
+    key: str
+    items: Sequence[Any]
+
+
+@dataclass
+class DsUpdateBitmap(Effect):
+    """Set bit ``index`` of the bitmap at ``key``; returns the updated bitmap
+    (a strongly-consistent read-after-write, as used by fan-in, §4.3.2)."""
+
+    ds: str
+    key: str
+    index: int
+
+
+@dataclass
+class DsListPrefix(Effect):
+    """List keys with ``prefix`` (GC support, §4.4). Result: list[str]."""
+
+    ds: str
+    prefix: str
+
+
+@dataclass
+class DsDelete(Effect):
+    """Delete ``keys`` (GC). Result: number deleted."""
+
+    ds: str
+    keys: Sequence[str]
+
+
+# ---- FaaSBackend ops -----------------------------------------------------
+
+
+@dataclass
+class CreateClient(Effect):
+    """Construct an SDK client for ``target`` (a FaaS or datastore id).
+
+    Modelled explicitly because client construction is the dominant cost of
+    failover (§5.3: ≈78 ms ≈ client creation + one cross-cloud invocation).
+    Result: opaque handle (the id itself).
+    """
+
+    target: str
+
+
+@dataclass
+class Invoke(Effect):
+    """Asynchronous HTTP invocation of ``function`` deployed on ``faas``.
+
+    Raises :class:`InvocationError` into the generator if the target FaaS
+    system is unreachable.  Result: ``True`` (accepted).
+    """
+
+    faas: str
+    function: str
+    payload: Any
+    size_bytes: int = 0
+
+
+@dataclass
+class RunUser(Effect):
+    """Execute the user function of the current node with ``data``.
+
+    The interpreter either advances virtual time per the node's workload
+    model (SimCloud) or actually calls the node's Python/JAX callable
+    (localjax).  Result: the user function output.
+    """
+
+    data: Any
+
+
+@dataclass
+class Parallel(Effect):
+    """Execute sub-effects concurrently (the 10-thread fan-out of §4.1.2).
+
+    Elapsed time is the max of the children; each child's result (or
+    exception instance) is returned positionally.  Exceptions are *returned*,
+    not raised, so the orchestrator can fail over per-branch.
+    """
+
+    effects: Sequence[Effect]
+
+
+@dataclass
+class Now(Effect):
+    """Current time in ms (virtual or wall). Result: float."""
+
+
+@dataclass
+class Trace(Effect):
+    """Attribute elapsed-time bookkeeping to a named phase (Fig 20 traces)."""
+
+    phase: str
+
+
+EffectGen = Generator[Effect, Any, Any]
+
+
+# ==========================================================================
+# Abstract backend interfaces (Table 2) — implemented by interpreters
+# ==========================================================================
+
+
+class DSBackend(abc.ABC):
+    """Datastore client contract. All ops atomic; reads strongly consistent."""
+
+    @abc.abstractmethod
+    def store_output_data(self, key: str, data: Any) -> bool:
+        """Conditionally create an item/object; True iff created."""
+
+    @abc.abstractmethod
+    def get_value(self, key: str) -> Any:
+        """Strong-consistency read; None if absent."""
+
+    @abc.abstractmethod
+    def create_invocation_list(self, key: str) -> bool:
+        """Conditionally create an empty string list."""
+
+    @abc.abstractmethod
+    def append_and_get_list(self, key: str, items: Sequence[Any]) -> list:
+        """Append items, return the latest list."""
+
+    @abc.abstractmethod
+    def create_bitmap(self, size: int, key: str) -> bool:
+        """Conditionally create a bitmap of ``size`` False bits."""
+
+    @abc.abstractmethod
+    def update_bitmap(self, index: int, key: str) -> list:
+        """Set bit ``index``; return the updated bitmap."""
+
+
+class FaaSBackend(abc.ABC):
+    """FaaS client contract."""
+
+    @abc.abstractmethod
+    def async_invoke(self, function: str, payload: Any) -> bool:
+        """Asynchronous HTTP invocation; raises InvocationError when down."""
+
+
+def ds_id(cloud: str, store: str) -> str:
+    return f"{cloud}/{store}"
+
+
+def faas_id(cloud: str, system: str) -> str:
+    return f"{cloud}/{system}"
+
+
+def cloud_of(backend_id: str) -> str:
+    return backend_id.split("/", 1)[0]

@@ -1,0 +1,572 @@
+"""SimCloud — a deterministic discrete-event Jointcloud simulator.
+
+The container has no AWS/AliYun access, so the multi-cloud substrate the paper
+evaluates on is simulated here.  Everything *algorithmic* (checkpoint
+protocols, failover, naming, coordination) executes for real — only wire
+latencies, queue dwell times and prices come from
+:mod:`repro.backends.calibration`.
+
+Model
+-----
+* A single event heap drives a virtual clock (milliseconds).  Every datastore
+  operation executes atomically at one point in virtual time, which makes the
+  stores linearizable by construction (the consistency level Table 2 demands).
+* Workflow functions are *effect generators* (see :mod:`repro.backends.shim`).
+  Each invocation becomes an :class:`Execution` that is resumed once per
+  effect completion.
+* Failure injection: cloud/FaaS outage windows kill running executions and
+  make invocations fail fast (connection-refused semantics); the FaaS retry
+  queue then re-delivers — i.e. the substrate provides exactly the
+  *at-least-once* guarantee the paper builds exactly-once on top of.
+* A crash policy hook can abort an execution at any effect boundary, which is
+  how the property tests explore the duplicate-execution space of §4.1.2's
+  "most extreme scenario".
+
+Determinism: a seeded RNG drives latency jitter; the heap breaks ties by
+sequence number.  Same seed ⇒ bit-identical timelines.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Generator, List, Optional, Sequence, Tuple
+
+from repro.backends import calibration as cal
+from repro.backends import shim
+from repro.backends.billing import Bill
+from repro.backends.datastore import TableState
+
+
+# ==========================================================================
+# Payload sizing
+# ==========================================================================
+
+
+@dataclass(frozen=True)
+class Blob:
+    """Opaque data of a known size (video chunk, tensor, document...).
+
+    Workloads pass Blobs around so egress/quota accounting sees realistic
+    byte counts without materializing data.
+    """
+
+    nbytes: int
+    tag: str = ""
+
+    def __repr__(self) -> str:  # keep repr small: Blob is sized explicitly
+        return f"Blob({self.nbytes}b,{self.tag})"
+
+
+def estimate_size(obj: Any) -> int:
+    """Rough wire size of a payload value, honoring explicit Blob sizes."""
+    if obj is None:
+        return 4
+    if isinstance(obj, Blob):
+        return obj.nbytes
+    if isinstance(obj, bytes):
+        return len(obj)
+    if isinstance(obj, str):
+        return len(obj.encode())
+    if isinstance(obj, bool):
+        return 5
+    if isinstance(obj, (int, float)):
+        return 8
+    if isinstance(obj, dict):
+        return 2 + sum(estimate_size(k) + estimate_size(v) + 2 for k, v in obj.items())
+    if isinstance(obj, (list, tuple)):
+        return 2 + sum(estimate_size(v) + 1 for v in obj)
+    return len(repr(obj))
+
+
+# ==========================================================================
+# Static entities
+# ==========================================================================
+
+
+@dataclass
+class FaaSSystem:
+    id: str                      # "cloud/system"
+    cloud: str
+    flavor: cal.Flavor
+    payload_quota: int
+
+    def __post_init__(self):
+        self.outages: List[Tuple[float, float]] = []
+
+    def up_at(self, t: float) -> bool:
+        return not any(t0 <= t < t1 for (t0, t1) in self.outages)
+
+
+@dataclass
+class DataStoreService:
+    id: str                      # "cloud/store"
+    cloud: str
+    kind: str                    # "table" | "object"
+    state: TableState = field(default_factory=lambda: TableState("ds"))
+
+    def read_ms(self) -> float:
+        return cal.TABLE_READ_MS if self.kind == "table" else cal.OBJECT_READ_MS
+
+    def write_ms(self) -> float:
+        return cal.TABLE_WRITE_MS if self.kind == "table" else cal.OBJECT_WRITE_MS
+
+
+@dataclass
+class Workload:
+    """Reference duration model for a workflow node's user function.
+
+    ``compute_ms`` scales with the flavor speed (Fig 1 heterogeneity);
+    ``fixed_ms`` does not (I/O, (de)serialization).  ``fn`` produces the
+    value-level output; if omitted the input is forwarded.
+    """
+
+    compute_ms: float = 0.0
+    fixed_ms: float = 0.0
+    fn: Optional[Callable[[Any], Any]] = None
+
+    def duration_ms(self, flavor: cal.Flavor) -> float:
+        return self.compute_ms / max(flavor.speed, 1e-9) + self.fixed_ms
+
+    def output(self, data: Any) -> Any:
+        return self.fn(data) if self.fn is not None else data
+
+
+@dataclass
+class Deployment:
+    """A function deployed on one FaaS system."""
+
+    function: str
+    faas: str                                  # "cloud/system"
+    handler: Callable[[Any], Generator]        # event -> effect generator
+    workload: Workload = field(default_factory=Workload)
+    memory_gb: Optional[float] = None          # default: flavor memory
+    max_retries: int = cal.MAX_RETRIES
+
+
+# ==========================================================================
+# Runtime records
+# ==========================================================================
+
+
+@dataclass
+class ExecutionRecord:
+    exec_id: int
+    function: str
+    faas: str
+    t_queued: float
+    t_start: float = math.nan
+    t_end: float = math.nan
+    status: str = "queued"       # queued|running|done|crashed|aborted
+    attempt: int = 0
+    payload: Any = None
+    result: Any = None
+    phases: List[Tuple[float, str]] = field(default_factory=list)
+
+    def phase_breakdown(self) -> Dict[str, float]:
+        """Per-phase elapsed time (Fig-20-style decomposition)."""
+        out: Dict[str, float] = {}
+        marks = self.phases + [(self.t_end, "_end")]
+        for (t0, name), (t1, _) in zip(marks, marks[1:]):
+            out[name] = out.get(name, 0.0) + (t1 - t0)
+        return out
+
+
+class _Event:
+    __slots__ = ("t", "seq", "fn", "cancelled")
+
+    def __init__(self, t: float, seq: int, fn: Callable[[], None]):
+        self.t, self.seq, self.fn = t, seq, fn
+        self.cancelled = False
+
+    def __lt__(self, other: "_Event") -> bool:
+        return (self.t, self.seq) < (other.t, other.seq)
+
+
+class Execution:
+    """One running attempt of a deployed function (drives its generator)."""
+
+    def __init__(self, sim: "SimCloud", dep: Deployment, payload: Any,
+                 record: ExecutionRecord):
+        self.sim = sim
+        self.dep = dep
+        self.payload = payload
+        self.record = record
+        self.gen: Generator = dep.handler(payload)
+        self.effect_index = 0
+        self.alive = True
+
+    # ---- generator stepping ------------------------------------------------
+
+    def start(self) -> None:
+        self.record.t_start = self.sim.now
+        self.record.status = "running"
+        self.sim.running.setdefault(self.dep.faas, set()).add(self)
+        self._step(lambda: self.gen.send(None))
+
+    def resume(self, value: Any) -> None:
+        if not self.alive:
+            return
+        self._step(lambda: self.gen.send(value))
+
+    def throw(self, exc: BaseException) -> None:
+        if not self.alive:
+            return
+        self._step(lambda: self.gen.throw(exc))
+
+    def _step(self, advance: Callable[[], shim.Effect]) -> None:
+        try:
+            effect = advance()
+        except StopIteration as stop:
+            self._finish(stop.value)
+            return
+        except shim.ShimError as exc:
+            # Unhandled shim error escapes the handler: the attempt crashes
+            # and the FaaS at-least-once queue may retry it.
+            self.sim._crash_execution(self, reason=repr(exc))
+            return
+        # crash-policy hook: abort *before* performing the effect (models a
+        # process kill between two side effects — §4.1.2 extreme scenario)
+        if self.sim.crash_policy is not None and self.sim.crash_policy(self, effect):
+            self.sim._crash_execution(self, reason="injected")
+            return
+        self.effect_index += 1
+        self.sim.perform(self, effect, self.resume, self.throw)
+
+    def _finish(self, result: Any) -> None:
+        self.alive = False
+        self.record.t_end = self.sim.now
+        self.record.status = "done"
+        self.record.result = result
+        self.sim.running.get(self.dep.faas, set()).discard(self)
+        faas = self.sim.faas[self.dep.faas]
+        mem = self.dep.memory_gb or faas.flavor.memory_gb
+        self.sim.bill.charge_execution(faas.cloud, mem,
+                                       self.record.t_end - self.record.t_start,
+                                       faas.flavor.price_per_gb_s)
+
+    def kill(self) -> None:
+        """Abort this attempt (outage / injected crash).
+
+        In-flight side effects (HTTP requests / datastore writes already on
+        the wire) are *not* cancelled — a dead sender cannot recall a packet.
+        Only the continuation is disarmed (``alive`` flag), which is exactly
+        the duplicate-effect hazard §4.1's checkpoints must absorb.
+        """
+        self.alive = False
+        self.record.t_end = self.sim.now
+        self.record.status = "crashed"
+        self.sim.running.get(self.dep.faas, set()).discard(self)
+        # Partial executions still bill their GB·s (clouds charge until kill).
+        faas = self.sim.faas[self.dep.faas]
+        mem = self.dep.memory_gb or faas.flavor.memory_gb
+        if not math.isnan(self.record.t_start):
+            self.sim.bill.charge_execution(faas.cloud, mem,
+                                           self.record.t_end - self.record.t_start,
+                                           faas.flavor.price_per_gb_s)
+
+
+# ==========================================================================
+# The simulator
+# ==========================================================================
+
+
+class SimCloud:
+    def __init__(self, config: Optional[dict] = None, *, seed: int = 0,
+                 jitter: float = 0.12):
+        config = config or cal.default_jointcloud()
+        self.rng = random.Random(seed)
+        self.jitter = jitter
+        self.now = 0.0
+        self._heap: List[_Event] = []
+        self._seq = itertools.count()
+        self.bill = Bill()
+
+        self.faas: Dict[str, FaaSSystem] = {}
+        self.stores: Dict[str, DataStoreService] = {}
+        self.cloud_region: Dict[str, str] = {}
+        self._rtt: Dict[Tuple[str, str], float] = {}
+        for cname, c in config["clouds"].items():
+            self.cloud_region[cname] = c.get("region", cname)
+            for sysname, flavor in c.get("faas", {}).items():
+                fid = shim.faas_id(cname, sysname)
+                quota = cal.PAYLOAD_QUOTA.get(cname, cal.DEFAULT_PAYLOAD_QUOTA)
+                self.faas[fid] = FaaSSystem(fid, cname, flavor, quota)
+            for t in c.get("tables", []):
+                did = shim.ds_id(cname, t)
+                self.stores[did] = DataStoreService(did, cname, "table", TableState(did))
+            for o in c.get("objects", []):
+                did = shim.ds_id(cname, o)
+                self.stores[did] = DataStoreService(did, cname, "object", TableState(did))
+        for (a, b), ms in config.get("rtt_ms", {}).items():
+            self._rtt[(a, b)] = ms
+            self._rtt[(b, a)] = ms
+
+        self.deployments: Dict[Tuple[str, str], Deployment] = {}
+        self.running: Dict[str, set] = {}
+        self.records: List[ExecutionRecord] = []
+        self._exec_ids = itertools.count()
+        self.crash_policy: Optional[Callable[[Execution, shim.Effect], bool]] = None
+        self.dropped: List[Tuple[str, str, Any]] = []   # (faas, function, payload)
+
+    # ---- topology helpers -----------------------------------------------------
+
+    def rtt_ms(self, cloud_a: str, cloud_b: str) -> float:
+        if cloud_a == cloud_b:
+            return cal.INTRA_CLOUD_RTT_MS
+        base = self._rtt.get((cloud_a, cloud_b))
+        if base is None:
+            same_region = self.cloud_region.get(cloud_a) == self.cloud_region.get(cloud_b)
+            base = (cal.INTER_CLOUD_SAME_REGION_RTT_MS if same_region
+                    else cal.INTER_CLOUD_CROSS_REGION_RTT_MS)
+        return base
+
+    def transfer_ms(self, cloud_a: str, cloud_b: str, nbytes: int) -> float:
+        """Latency of moving nbytes between clouds (RTT + bandwidth term)."""
+        bw_ms = (nbytes / (cal.BANDWIDTH_GBPS * 1e9)) * 1000.0 * 8 / 8
+        return self.rtt_ms(cloud_a, cloud_b) + bw_ms
+
+    def _jit(self, ms: float) -> float:
+        return ms * (1.0 + self.rng.random() * self.jitter)
+
+    # ---- deployment & invocation ----------------------------------------------
+
+    def deploy(self, dep: Deployment) -> None:
+        if dep.faas not in self.faas:
+            raise KeyError(f"unknown FaaS system {dep.faas}")
+        self.deployments[(dep.faas, dep.function)] = dep
+
+    def submit(self, faas: str, function: str, payload: Any, t: float = 0.0) -> None:
+        """External client async-invokes ``function`` at virtual time ``t``."""
+        self.at(t, lambda: self._enqueue(faas, function, payload, attempt=0))
+
+    def at(self, t: float, fn: Callable[[], None]) -> _Event:
+        ev = _Event(max(t, self.now), next(self._seq), fn)
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def after(self, dt: float, fn: Callable[[], None]) -> _Event:
+        return self.at(self.now + dt, fn)
+
+    def _enqueue(self, faas_id_: str, function: str, payload: Any, attempt: int) -> None:
+        """Queue an accepted async invocation for execution (at-least-once)."""
+        dep = self.deployments.get((faas_id_, function))
+        if dep is None:
+            raise KeyError(f"function {function} not deployed on {faas_id_}")
+        rec = ExecutionRecord(next(self._exec_ids), function, faas_id_,
+                              t_queued=self.now, attempt=attempt, payload=payload)
+        self.records.append(rec)
+
+        def start():
+            faas = self.faas[faas_id_]
+            if not faas.up_at(self.now):
+                rec.status = "crashed"
+                self._retry(dep, payload, attempt)
+                return
+            ex = Execution(self, dep, payload, rec)
+            ex.start()
+
+        self.after(self._jit(cal.ASYNC_QUEUE_MS), start)
+
+    def _retry(self, dep: Deployment, payload: Any, attempt: int) -> None:
+        if attempt < dep.max_retries:
+            self.after(self._jit(cal.RETRY_BACKOFF_MS),
+                       lambda: self._enqueue(dep.faas, dep.function, payload, attempt + 1))
+        else:
+            self.dropped.append((dep.faas, dep.function, payload))
+
+    def _crash_execution(self, ex: Execution, reason: str) -> None:
+        ex.kill()
+        self._retry(ex.dep, ex.payload, ex.record.attempt)
+
+    # ---- failure injection ---------------------------------------------------
+
+    def schedule_outage(self, target: str, t0: float, t1: float) -> None:
+        """Take a FaaS system ("cloud/sys") or a whole cloud ("cloud") down
+        over [t0, t1).  Running executions on it are killed at t0."""
+        systems = [f for f in self.faas.values()
+                   if f.id == target or f.cloud == target]
+        if not systems:
+            raise KeyError(f"no FaaS system matches {target}")
+        for f in systems:
+            f.outages.append((t0, t1))
+
+            def kill_running(fid=f.id):
+                for ex in list(self.running.get(fid, ())):
+                    self._crash_execution(ex, reason="outage")
+
+            self.at(t0, kill_running)
+
+    # ---- effect interpreter ----------------------------------------------------
+
+    def perform(self, ex: Execution, effect: shim.Effect,
+                ok: Callable[[Any], None], err: Callable[[BaseException], None]) -> None:
+        faas = self.faas[ex.dep.faas]
+        here = faas.cloud
+
+        if isinstance(effect, shim.Now):
+            ok(self.now)
+
+        elif isinstance(effect, shim.Trace):
+            ex.record.phases.append((self.now, effect.phase))
+            ok(None)
+
+        elif isinstance(effect, shim.RunUser):
+            dur = self._jit(ex.dep.workload.duration_ms(faas.flavor))
+            out = ex.dep.workload.output(effect.data)
+            self._hold(ex, dur, lambda: ok(out))
+
+        elif isinstance(effect, shim.CreateClient):
+            self._hold(ex, self._jit(cal.CLIENT_CREATE_MS), lambda: ok(effect.target))
+
+        elif isinstance(effect, shim.Invoke):
+            self._perform_invoke(ex, here, effect, ok, err)
+
+        elif isinstance(effect, (shim.DsCreate, shim.DsGet, shim.DsAppendGetList,
+                                 shim.DsUpdateBitmap, shim.DsListPrefix, shim.DsDelete)):
+            self._perform_ds(ex, here, effect, ok, err)
+
+        elif isinstance(effect, shim.Parallel):
+            self._perform_parallel(ex, effect, ok)
+
+        else:
+            raise TypeError(f"unknown effect {effect!r}")
+
+    def _hold(self, ex: Execution, dt: float, then: Callable[[], None]) -> None:
+        """Resume ``ex`` after ``dt`` ms (continuation is a no-op if killed)."""
+        self.after(dt, then)
+
+    # -- invoke ------------------------------------------------------------------
+
+    def _perform_invoke(self, ex: Execution, here: str, effect: shim.Invoke,
+                        ok: Callable[[Any], None], err: Callable[[BaseException], None],
+                        collect: Optional[Callable[[Any], None]] = None) -> None:
+        target = self.faas.get(effect.faas)
+        if target is None:
+            err(shim.InvocationError(f"unknown FaaS {effect.faas}"))
+            return
+        nbytes = effect.size_bytes or estimate_size(effect.payload)
+        if nbytes > target.payload_quota:
+            err(shim.PayloadTooLarge(
+                f"{nbytes}B > quota {target.payload_quota}B on {effect.faas}"))
+            return
+        rtt = self._jit(self.rtt_ms(here, target.cloud))
+
+        def arrive():
+            if not target.up_at(self.now):
+                # connection refused — caller learns after the return trip
+                self._hold(ex, self._jit(rtt / 2),
+                           lambda: err(shim.InvocationError(f"{effect.faas} is down")))
+                return
+            # control-plane accept + payload transfer; bill egress if cross-cloud
+            if target.cloud != here:
+                self.bill.charge_egress(here, nbytes)
+            self.bill.charge_invoke(target.cloud)
+            accept = self._jit(cal.INVOKE_API_MS) + (nbytes / (cal.BANDWIDTH_GBPS * 1e9)) * 1000.0
+            self.after(accept, lambda: self._enqueue(effect.faas, effect.function,
+                                                     effect.payload, attempt=0))
+            self._hold(ex, accept + rtt / 2, lambda: ok(True))
+
+        self.after(rtt / 2, arrive)
+
+    # -- datastore -----------------------------------------------------------------
+
+    def _perform_ds(self, ex: Execution, here: str, effect: shim.Effect,
+                    ok: Callable[[Any], None], err: Callable[[BaseException], None]) -> None:
+        store = self.stores.get(effect.ds)
+        if store is None:
+            err(shim.DataStoreError(f"unknown datastore {effect.ds}"))
+            return
+        rtt = self.rtt_ms(here, store.cloud)
+
+        def apply() -> Tuple[Any, float, int, int]:
+            """Returns (result, extra_latency_ms, write_ops, read_ops, moved_bytes_out)."""
+            st = store.state
+            if isinstance(effect, shim.DsCreate):
+                nbytes = effect.size_bytes or estimate_size(effect.value)
+                created = st.create_if_absent(effect.key, effect.value)
+                move = nbytes if store.cloud != here else 0
+                return created, store.write_ms() + nbytes / (cal.BANDWIDTH_GBPS * 1e9) * 1000.0, 1, 0, move
+            if isinstance(effect, shim.DsGet):
+                val = st.get(effect.key)
+                nbytes = estimate_size(val)
+                move = nbytes if store.cloud != here else 0
+                return val, store.read_ms() + nbytes / (cal.BANDWIDTH_GBPS * 1e9) * 1000.0, 0, 1, move
+            if isinstance(effect, shim.DsAppendGetList):
+                val = st.append_and_get_list(effect.key, effect.items)
+                return val, store.write_ms() + store.read_ms(), 1, 1, 0
+            if isinstance(effect, shim.DsUpdateBitmap):
+                val = st.update_bitmap(effect.index, effect.key)
+                return val, store.write_ms() + store.read_ms(), 1, 1, 0
+            if isinstance(effect, shim.DsListPrefix):
+                return st.list_prefix(effect.prefix), store.read_ms(), 0, 1, 0
+            if isinstance(effect, shim.DsDelete):
+                n = st.delete(effect.keys)
+                return n, store.write_ms(), len(list(effect.keys)), 0, 0
+            raise TypeError(effect)
+
+        def arrive():
+            # The store itself is assumed HA (managed service); only the
+            # network from a dead cloud fails — modelled at the caller side.
+            result, op_ms, w, r, moved = apply()
+            if w:
+                self.bill.charge_ds_write(store.cloud, w)
+            if r:
+                self.bill.charge_ds_read(store.cloud, r)
+            if moved:
+                self.bill.charge_egress(store.cloud if isinstance(effect, shim.DsGet) else here,
+                                        moved)
+            if isinstance(result, BaseException):
+                self._hold(ex, self._jit(op_ms) + rtt / 2, lambda: err(result))
+            else:
+                self._hold(ex, self._jit(op_ms) + rtt / 2, lambda: ok(result))
+
+        self.after(rtt / 2, arrive)
+
+    # -- parallel -----------------------------------------------------------------
+
+    def _perform_parallel(self, ex: Execution, effect: shim.Parallel,
+                          ok: Callable[[Any], None]) -> None:
+        n = len(effect.effects)
+        if n == 0:
+            ok([])
+            return
+        results: List[Any] = [None] * n
+        remaining = [n]
+
+        def done(i: int, value: Any) -> None:
+            results[i] = value
+            remaining[0] -= 1
+            if remaining[0] == 0:
+                ok(list(results))
+
+        for i, sub in enumerate(effect.effects):
+            self.perform(ex, sub,
+                         ok=(lambda v, i=i: done(i, v)),
+                         err=(lambda e, i=i: done(i, e)))
+
+    # ---- main loop ----------------------------------------------------------------
+
+    def run(self, t_max: float = 1e9) -> float:
+        """Drain the event heap (up to t_max). Returns the final clock."""
+        while self._heap:
+            ev = heapq.heappop(self._heap)
+            if ev.cancelled:
+                continue
+            if ev.t > t_max:
+                self.now = t_max
+                break
+            self.now = ev.t
+            ev.fn()
+        return self.now
+
+    # ---- reporting -----------------------------------------------------------------
+
+    def executions_of(self, function: str) -> List[ExecutionRecord]:
+        return [r for r in self.records if r.function == function]
+
+    def completed(self) -> List[ExecutionRecord]:
+        return [r for r in self.records if r.status == "done"]

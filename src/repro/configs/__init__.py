@@ -1,0 +1,10 @@
+"""Assigned-architecture configs (one module per arch) + the shape registry.
+
+``get(arch_id)`` returns the exact published configuration; ``get_smoke``
+returns a reduced same-family variant used by the CPU smoke tests.  The full
+configs are exercised only through the dry-run (ShapeDtypeStruct — never
+allocated).
+"""
+
+from repro.configs.registry import (  # noqa: F401
+    ARCHS, SHAPES, all_cells, get, get_smoke, input_specs, runnable, skip_reason)

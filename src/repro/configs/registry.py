@@ -1,0 +1,107 @@
+"""Arch registry + ``input_specs()`` — the dry-run's abstract inputs.
+
+``input_specs(arch, shape)`` returns weak-type-correct ShapeDtypeStructs for
+every model input of the given (architecture × shape) cell — the same pattern
+shannon/kernels uses: shardable, allocation-free.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import SHAPES, SUBQUADRATIC_FAMILIES, ShapeSpec
+from repro.models.common import ModelConfig
+
+_MODULES = {
+    "mamba2-370m": "mamba2_370m",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "dbrx-132b": "dbrx_132b",
+    "mistral-large-123b": "mistral_large_123b",
+    "gemma2-27b": "gemma2_27b",
+    "yi-9b": "yi_9b",
+    "qwen1.5-110b": "qwen15_110b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "phi-3-vision-4.2b": "phi3_vision_42b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def _module(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def get(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    return _module(arch).SMOKE
+
+
+def skip_reason(arch: str, shape: str) -> Optional[str]:
+    """None if the cell runs; otherwise why it is skipped (DESIGN.md §5)."""
+    cfg = get(arch)
+    spec = SHAPES[shape]
+    if spec.name == "long_500k" and cfg.family not in SUBQUADRATIC_FAMILIES:
+        return ("quadratic attention at 524k tokens — long-context cells run "
+                "only for SSM/hybrid archs (assignment note)")
+    return None
+
+
+def runnable(arch: str, shape: str) -> bool:
+    return skip_reason(arch, shape) is None
+
+
+def all_cells() -> Tuple[Tuple[str, str], ...]:
+    return tuple((a, s) for a in ARCHS for s in SHAPES)
+
+
+# ==========================================================================
+# input_specs
+# ==========================================================================
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Abstract model inputs for one cell.
+
+    train  → {tokens, labels, mask [, patches, frames]}
+    prefill→ {tokens [, patches, frames]}
+    decode → {token, cache}  (cache via eval_shape over init_cache)
+    """
+    b, l = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        lt = l - cfg.n_patches                       # vlm: patches fill the rest
+        out = {
+            "tokens": _sds((b, lt), jnp.int32),
+            "labels": _sds((b, lt), jnp.int32),
+            "mask": _sds((b, lt), jnp.float32),
+        }
+        if cfg.n_patches:
+            out["patches"] = _sds((b, cfg.n_patches, 1024), jnp.bfloat16)
+        if cfg.frame_input:
+            out["frames"] = _sds((b, max(1, l // 8), 1024), jnp.bfloat16)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": _sds((b, l - cfg.n_patches), jnp.int32)}
+        if cfg.n_patches:
+            out["patches"] = _sds((b, cfg.n_patches, 1024), jnp.bfloat16)
+        if cfg.frame_input:
+            out["frames"] = _sds((b, max(1, l // 8), 1024), jnp.bfloat16)
+        return out
+    if shape.kind == "decode":
+        from repro.models import lm
+        cache = jax.eval_shape(lambda: lm.init_cache(cfg, b, l))
+        return {"token": _sds((b, 1), jnp.int32), "cache": cache}
+    raise ValueError(shape.kind)

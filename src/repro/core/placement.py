@@ -1,0 +1,70 @@
+"""Data placement policies (paper §4.3.1) + heterogeneity-aware stage placement (§2.1).
+
+The *majority rule*: for indirect transfers feeding a fan-out/fan-in group,
+put the datastore in the cloud hosting the plurality of the group's
+functions — every colocated access is then intra-cloud and only the minority
+pays egress (Fig 11, right).
+
+Stage placement: given per-flavor duration and price models, pick the FaaS
+system minimizing makespan (or cost) for a compute stage — the mechanism
+behind the paper's Figs 1–2 observations, used by the crosscloud-inference
+example and the heterogeneity benchmarks.
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+from typing import Dict, Iterable, Optional, Sequence, Tuple
+
+from repro.backends import calibration as cal
+
+
+def majority_cloud(clouds: Sequence[str]) -> Optional[str]:
+    """Most frequent cloud; deterministic (alphabetical) tie-break."""
+    if not clouds:
+        return None
+    counts = Counter(clouds)
+    top = max(counts.values())
+    return sorted(c for c, n in counts.items() if n == top)[0]
+
+
+def egress_transfers(group_clouds: Sequence[str], placed_at: str) -> int:
+    """Number of cross-cloud transfers a placement incurs (Fig 11 counting)."""
+    return sum(1 for c in group_clouds if c != placed_at)
+
+
+def best_placement(group_clouds: Sequence[str]) -> Tuple[str, int]:
+    """(cloud, egress transfer count) minimizing cross-cloud movement."""
+    cloud = majority_cloud(group_clouds)
+    assert cloud is not None
+    return cloud, egress_transfers(group_clouds, cloud)
+
+
+# --------------------------------------------------------------------------
+# Heterogeneity-aware stage placement (Observation 1 & 2)
+# --------------------------------------------------------------------------
+
+
+def stage_cost(flavor: cal.Flavor, compute_ms: float, fixed_ms: float = 0.0,
+               memory_gb: Optional[float] = None) -> Tuple[float, float]:
+    """(duration_ms, usd) of running a stage once on ``flavor`` (GB·s model)."""
+    dur = compute_ms / max(flavor.speed, 1e-9) + fixed_ms
+    mem = memory_gb if memory_gb is not None else flavor.memory_gb
+    usd = mem * (dur / 1000.0) * flavor.price_per_gb_s + cal.INVOKE_PRICE
+    return dur, usd
+
+
+def choose_flavor(flavors: Dict[str, cal.Flavor], compute_ms: float,
+                  fixed_ms: float = 0.0, objective: str = "makespan",
+                  memory_gb: Optional[float] = None) -> Tuple[str, float, float]:
+    """Pick the FaaS system minimizing ``objective`` ∈ {makespan, cost}.
+
+    Returns (faas_id, duration_ms, usd). Deterministic tie-break by id.
+    """
+    scored = []
+    for fid, fl in sorted(flavors.items()):
+        dur, usd = stage_cost(fl, compute_ms, fixed_ms, memory_gb)
+        key = dur if objective == "makespan" else usd
+        scored.append((key, fid, dur, usd))
+    key, fid, dur, usd = min(scored)
+    return fid, dur, usd

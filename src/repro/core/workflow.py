@@ -1,0 +1,115 @@
+"""Deploy compiled workflows onto a backend and launch instances.
+
+``deploy`` compiles the WorkflowSpec into per-function NodeViews, then
+registers one deployment per (function × FaaS system) — primaries *and*
+pre-deployed failover backups share the same NodeView, because checkpoint
+keys must be attempt-location-independent (§4.2).  A GC function is deployed
+once per cloud (§4.4).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+from repro.backends import shim
+from repro.backends.simcloud import Deployment, SimCloud, Workload
+from repro.core import orchestrator as orch
+from repro.core import subgraph as sg
+
+
+def catalog_from_simcloud(sim: SimCloud) -> sg.Catalog:
+    tables: Dict[str, str] = {}
+    objects: Dict[str, str] = {}
+    quotas: Dict[str, int] = {}
+    gc_faas: Dict[str, str] = {}
+    for did, store in sim.stores.items():
+        target = tables if store.kind == "table" else objects
+        target.setdefault(store.cloud, did)
+    for fid, f in sim.faas.items():
+        quotas.setdefault(f.cloud, f.payload_quota)
+        quotas[f.cloud] = min(quotas[f.cloud], f.payload_quota)
+        # GC prefers the cheapest (CPU) flavor in each cloud
+        cur = gc_faas.get(f.cloud)
+        if cur is None or f.flavor.price_per_gb_s < sim.faas[cur].flavor.price_per_gb_s:
+            gc_faas[f.cloud] = fid
+    return sg.Catalog(tables, objects, quotas, gc_faas)
+
+
+@dataclass
+class DeployedWorkflow:
+    spec: sg.WorkflowSpec
+    views: Dict[str, sg.NodeView]
+    sim: SimCloud
+    _ids: itertools.count = None  # type: ignore[assignment]
+
+    def __post_init__(self):
+        self._ids = itertools.count()
+
+    @property
+    def entry(self) -> sg.NodeView:
+        assert self.spec.entry is not None
+        return self.views[self.spec.entry]
+
+    def start(self, input_value: Any = None, *, workflow_id: Optional[str] = None,
+              t: float = 0.0) -> str:
+        """Async-invoke the entry function at virtual time ``t``."""
+        wfid = workflow_id or f"{self.spec.name}-{next(self._ids):06d}"
+        self.sim.submit(self.entry.faas, self.entry.name,
+                        {"workflow_id": wfid, "input": input_value}, t=t)
+        return wfid
+
+    # ---- result extraction -------------------------------------------------
+
+    def executions(self, workflow_id: str):
+        """All execution records belonging to one workflow instance."""
+        out = []
+        for r in self.sim.records:
+            p = r.payload
+            wfid = None
+            if isinstance(p, dict):
+                wfid = (p.get("workflow_id")
+                        or p.get("Control", {}).get("workflowId"))
+            if wfid is not None and str(wfid).startswith(workflow_id):
+                out.append(r)
+        return out
+
+    def makespan_ms(self, workflow_id: str, *, include_gc: bool = False) -> float:
+        recs = [r for r in self.executions(workflow_id)
+                if r.status == "done" and (include_gc or r.function != sg.GC_FUNCTION)]
+        if not recs:
+            return float("nan")
+        t0 = min(r.t_queued for r in recs)
+        t1 = max(r.t_end for r in recs)
+        return t1 - t0
+
+    def result_of(self, workflow_id: str, function: str) -> Any:
+        done = [r for r in self.executions(workflow_id)
+                if r.function == function and r.status == "done"]
+        return done[-1].result if done else None
+
+
+def deploy(sim: SimCloud, spec: sg.WorkflowSpec,
+           catalog: Optional[sg.Catalog] = None) -> DeployedWorkflow:
+    catalog = catalog or catalog_from_simcloud(sim)
+    views = sg.compile_workflow(spec, catalog)
+    # ByRedundant replicas are additional deployment targets of the dst fn
+    replica_targets: dict = {}
+    for view in views.values():
+        for info in view.next_funcs:
+            if info.mode == sg.BY_REDUNDANT:
+                replica_targets.setdefault(info.name, set()).update(info.replicas)
+    for name, view in views.items():
+        f = spec.functions[name]
+        workload = f.workload if isinstance(f.workload, Workload) else Workload(fn=f.workload)
+        targets = {view.faas, *view.failover, *replica_targets.get(name, ())}
+        for faas in sorted(targets):
+            sim.deploy(Deployment(
+                function=name, faas=faas, handler=orch.make_handler(view),
+                workload=workload, memory_gb=f.memory_gb))
+    for cloud, faas in catalog.gc_faas.items():
+        if (faas, sg.GC_FUNCTION) not in sim.deployments:
+            sim.deploy(Deployment(function=sg.GC_FUNCTION, faas=faas,
+                                  handler=orch.gc_handler, workload=Workload()))
+    return DeployedWorkflow(spec, views, sim)

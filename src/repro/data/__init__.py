@@ -1,0 +1,3 @@
+"""Deterministic synthetic data pipeline (sharded host loading)."""
+
+from repro.data.synthetic import SyntheticLM, make_batch  # noqa: F401

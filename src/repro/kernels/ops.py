@@ -1,0 +1,57 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute with ``interpret=True`` — the
+kernel body runs as traced jnp over the same tiles, which is how correctness
+is validated; on TPU backends they lower to Mosaic.  ``use_kernels(True)``
+flips the model stack's hot paths from the jnp reference implementations to
+these kernels (TPU deployments turn this on in the launcher).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.rglru_scan import rglru_scan as _rglru_pallas
+from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
+
+_USE_KERNELS = False
+
+
+def use_kernels(enable: bool = True) -> None:
+    global _USE_KERNELS
+    _USE_KERNELS = enable
+
+
+def kernels_enabled() -> bool:
+    return _USE_KERNELS
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, block_q: int = 512,
+                    block_k: int = 512, interpret: Optional[bool] = None):
+    """Flash-attention forward. q: [B,L,H,hd]; k,v: [B,S,Hkv,hd]."""
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               softcap=softcap, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a, bmat, cmat, *, chunk: int = 256,
+             interpret: Optional[bool] = None):
+    """Mamba2 SSD. x:[Bt,L,H,P] dt:[Bt,L,H] a:[H] B,C:[Bt,L,N] → y."""
+    return _ssd_pallas(x, dt, a, bmat, cmat, chunk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_l", "block_w", "interpret"))
+def rglru_scan(log_a, b, *, block_l: int = 256, block_w: int = 256,
+               interpret: Optional[bool] = None):
+    """RG-LRU recurrence over axis 1. log_a, b: [B,L,W] → h (fp32)."""
+    return _rglru_pallas(log_a, b, block_l=block_l, block_w=block_w,
+                         interpret=interpret)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Each oracle is the *naive* semantics — dense softmax attention, the fp32
+chunked SSD recurrence, the associative-scan recurrence — independent of the
+kernels' tiling choices.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import _sdpa, make_causal_mask
+from repro.models.rglru import scan_ref as _rglru_scan_ref
+from repro.models.ssm import ssd_chunked as _ssd_chunked
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        softcap: float = 0.0) -> jax.Array:
+    """Dense softmax attention. q: [B,L,H,hd]; k,v: [B,S,Hkv,hd]."""
+    l, s = q.shape[1], k.shape[1]
+    mask = make_causal_mask(l, s, window=window)[None] if causal else None
+    return _sdpa(q, k, v, mask, softcap)
+
+
+def ssd_scan_ref(x: jax.Array, dt: jax.Array, a: jax.Array, bmat: jax.Array,
+                 cmat: jax.Array, chunk: int) -> jax.Array:
+    """Chunked SSD recurrence (fp32). Returns y only (state is kernel-internal)."""
+    y, _ = _ssd_chunked(x, dt, a, bmat, cmat, min(chunk, x.shape[1]))
+    return y
+
+
+def rglru_scan_ref(log_a: jax.Array, b: jax.Array) -> jax.Array:
+    """h_t = exp(log_a_t)·h_{t-1} + b_t over axis 1 (fp32, log-depth)."""
+    return _rglru_scan_ref(log_a.astype(jnp.float32), b.astype(jnp.float32))

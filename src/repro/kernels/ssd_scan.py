@@ -1,0 +1,107 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan (arXiv:2405.21060 §6).
+
+Grid ``(B, H, L/Q)`` with the chunk axis minor/sequential: the [P, N] SSM
+state lives in VMEM scratch and is carried across chunk tiles, so the HBM
+traffic per chunk is exactly the operand/output tiles — the jnp path's
+[Q, Q, H] segment-decay tensors (the 2 GB/layer intermediates the dry-run
+exposes) never exist.
+
+Per tile (head h, chunk c), all in fp32:
+    cum   = cumsum(dt·A)                              [Q, 1]
+    y     = ((C Bᵀ) ⊙ tril(exp(cum_i − cum_j)) ⊙ dt_j) X      (intra, MXU)
+          + exp(cum) ⊙ (C h_prevᵀ)                            (inter)
+    h     = exp(cum_Q)·h_prev + Xᵀ(B ⊙ exp(cum_Q − cum)·dt)   (state update)
+
+Block shapes: X [Q, P], B/C [Q, N], scores [Q, Q] — Q=chunk=256, P=64,
+N=128 ⇒ ≈ 0.6 MB working set, all matmul dims MXU-aligned.
+
+``dA = dt·A`` is precomputed by the wrapper (ops.py) so the kernel takes no
+scalar operands.  Oracle: :func:`repro.models.ssm.ssd_chunked`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, da_ref, b_ref, c_ref, y_ref, h_ref, *, q: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    f32 = jnp.float32
+    x = x_ref[0, :, 0, :].astype(f32)                    # [Q, P]
+    dt = dt_ref[0, :, 0:1].astype(f32)                   # [Q, 1]  (lane dim 1)
+    da = da_ref[0, :, 0:1].astype(f32)                   # [Q, 1]
+    bmat = b_ref[0].astype(f32)                          # [Q, N]
+    cmat = c_ref[0].astype(f32)                          # [Q, N]
+
+    cum = jnp.cumsum(da, axis=0)                         # [Q, 1]
+    # intra-chunk dual form
+    seg = cum - cum.T                                    # [Q, Q] = cum_i - cum_j
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    decay = jnp.where(jj <= ii, jnp.exp(seg), 0.0)
+    cb = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                             preferred_element_type=f32)          # [Q, Q]
+    scores = cb * decay * dt.T                           # ⊙ dt_j
+    y = jax.lax.dot(scores, x, preferred_element_type=f32)        # [Q, P]
+
+    # inter-chunk: exp(cum_i)·C_i·h_prev
+    h_prev = h_ref[...]                                  # [P, N]
+    y += jnp.exp(cum) * jax.lax.dot_general(
+        cmat, h_prev, (((1,), (1,)), ((), ())), preferred_element_type=f32)
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # state: h = γ·h_prev + Xᵀ (B ⊙ w),   w = exp(cum_Q − cum)·dt
+    gamma = jnp.exp(cum[q - 1, 0])
+    w = jnp.exp(cum[q - 1, 0] - cum) * dt                # [Q, 1]
+    s_new = jax.lax.dot_general(x, bmat * w, (((0,), (0,)), ((), ())),
+                                preferred_element_type=f32)       # [P, N]
+    h_ref[...] = h_prev * gamma + s_new
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, bmat: jax.Array,
+             cmat: jax.Array, chunk: int,
+             interpret: Optional[bool] = None) -> jax.Array:
+    """x: [Bt,L,H,P]  dt: [Bt,L,H]  a: [H] (<0)  B,C: [Bt,L,N] → y: [Bt,L,H,P]."""
+    bt, l, h, p = x.shape
+    n = bmat.shape[-1]
+    q = min(chunk, l)
+    if l % q:
+        raise ValueError(f"L={l} must be a multiple of chunk={q}")
+    nc = l // q
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    da = dt * a[None, None, :]                            # precomputed dt·A
+
+    kernel = functools.partial(_kernel, q=q)
+    y = pl.pallas_call(
+        kernel,
+        grid=(bt, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda b, ih, ic: (b, ic, ih, 0)),
+            pl.BlockSpec((1, q, 1), lambda b, ih, ic: (b, ic, ih)),
+            pl.BlockSpec((1, q, 1), lambda b, ih, ic: (b, ic, ih)),
+            pl.BlockSpec((1, q, n), lambda b, ih, ic: (b, ic, 0)),
+            pl.BlockSpec((1, q, n), lambda b, ih, ic: (b, ic, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, 1, p), lambda b, ih, ic: (b, ic, ih, 0)),
+        out_shape=jax.ShapeDtypeStruct((bt, l, h, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="ssd_scan",
+    )(x, dt, da, bmat, cmat)
+    return y

@@ -1,0 +1,179 @@
+"""Roofline-term extraction from compiled (post-SPMD) HLO.
+
+``cost_analysis()`` supplies per-device FLOPs and HBM bytes; collective
+traffic is NOT in cost_analysis, so we parse the optimized HLO text and sum
+operand sizes of every collective op, converting to per-device *wire* bytes
+with the standard ring-algorithm factors:
+
+    all-gather          out_bytes · (n-1)/n
+    reduce-scatter      in_bytes  · (n-1)/n
+    all-reduce          2 · in_bytes · (n-1)/n       (RS + AG)
+    all-to-all          in_bytes  · (n-1)/n
+    collective-permute  in_bytes
+
+(n = replica-group size; shapes in post-SPMD HLO are already per-partition.)
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import Counter, defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+# --------------------------------------------------------------------------
+# v5e constants (per chip)
+# --------------------------------------------------------------------------
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\((.*)$")
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|f8e4m3fn|f8e5m2|s4|s8|s16|s32|s64|u4|u8|u16|u32|u64|c64|c128)\[([\d,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))                     # [groups, members]<=[N]
+    return total_devices
+
+
+@dataclass
+class CollectiveStats:
+    ops: Counter = field(default_factory=Counter)
+    operand_bytes: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    wire_bytes: float = 0.0
+    detail: List[Tuple[str, int, int]] = field(default_factory=list)
+
+    def as_dict(self) -> dict:
+        return {"ops": dict(self.ops),
+                "operand_bytes": dict(self.operand_bytes),
+                "wire_bytes": self.wire_bytes}
+
+
+def parse_collectives(hlo_text: str, total_devices: int) -> CollectiveStats:
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        kind, rest = m.group(1), m.group(2)
+        # operand shapes appear inside the call parens; result shape is left of '='
+        operands = _SHAPE_RE.findall(rest.split(")")[0] + ")")
+        in_bytes = sum(_shape_bytes(d, s) for d, s in operands)
+        n = max(2, _group_size(line, total_devices))
+        ring = (n - 1) / n
+        if kind == "all-gather":
+            wire = in_bytes * (n - 1)              # out = in·n; wire = out·(n-1)/n
+        elif kind == "reduce-scatter":
+            wire = in_bytes * ring
+        elif kind == "all-reduce":
+            wire = 2 * in_bytes * ring
+        elif kind == "all-to-all":
+            wire = in_bytes * ring
+        else:                                       # collective-permute
+            wire = in_bytes
+        st.ops[kind] += 1
+        st.operand_bytes[kind] += in_bytes
+        st.wire_bytes += wire
+        st.detail.append((kind, in_bytes, n))
+    return st
+
+
+@dataclass
+class Roofline:
+    """The three §Roofline terms (seconds) + provenance."""
+
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device HLO bytes accessed
+    wire_bytes: float            # per-device collective wire bytes
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_per_device: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful."""
+        return (self.model_flops_per_device / self.flops) if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline the step achieves if every term
+        overlaps perfectly: useful compute time / bound."""
+        if self.bound_s == 0:
+            return 0.0
+        return (self.model_flops_per_device / PEAK_FLOPS) / self.bound_s
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "wire_bytes": self.wire_bytes,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "model_flops_per_device": self.model_flops_per_device,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def roofline_terms(cost: dict, *, wire_bytes: float = None,
+                   coll: Optional[CollectiveStats] = None,
+                   model_flops_per_device: float = 0.0) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    if wire_bytes is None:
+        wire_bytes = coll.wire_bytes if coll is not None else 0.0
+    return Roofline(
+        flops=flops, hbm_bytes=hbm, wire_bytes=wire_bytes,
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=hbm / HBM_BW,
+        collective_s=wire_bytes / ICI_BW,
+        model_flops_per_device=model_flops_per_device,
+    )
+
+
+def model_flops(cfg, shape_kind: str, seq_len: int, global_batch: int) -> float:
+    """MODEL_FLOPS: 6·N·D train (N = active params), 2·N per decoded token."""
+    n_active = cfg.param_count(active_only=True)
+    if shape_kind == "train":
+        return 6.0 * n_active * seq_len * global_batch
+    if shape_kind == "prefill":
+        return 2.0 * n_active * seq_len * global_batch
+    return 2.0 * n_active * global_batch            # decode: one token/seq

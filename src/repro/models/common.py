@@ -1,0 +1,232 @@
+"""Shared model primitives: config, norms, RoPE, initializers, dtype policy.
+
+Pure-JAX (no flax): parameters are nested dicts of jnp arrays, every module is
+an ``init(rng, cfg) -> params`` + ``apply(params, x, ...) -> y`` pair.  All
+hot-path math runs in ``cfg.compute_dtype`` (bf16 on TPU) against
+``cfg.param_dtype`` (fp32 master) — the cast points are where the FSDP
+all-gather precision optimization (§Perf) plugs in.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ==========================================================================
+# Architecture config
+# ==========================================================================
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_expert: int                 # per-expert FFN hidden size
+    num_shared: int = 0           # always-on shared experts (DeepSeek-MoE)
+    capacity_factor: float = 1.25
+    router_dtype: str = "float32"
+
+
+@dataclass(frozen=True)
+class SSMConfig:                   # Mamba2 / SSD
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 256
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:                 # RecurrentGemma / Griffin
+    lru_width: int = 0             # 0 ⇒ == d_model
+    conv_kernel: int = 4
+    block_pattern: Tuple[str, ...] = ("rglru", "rglru", "attn")  # 1:2 attn:rglru
+    window: int = 2048             # local-attention window
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0             # 0 ⇒ d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    rms_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # gemma2-style features
+    attn_softcap: float = 0.0     # 0 ⇒ off
+    logit_softcap: float = 0.0
+    window: int = 0               # sliding window; 0 ⇒ full attention
+    layer_pattern: Tuple[str, ...] = ("attn",)   # cycled across layers
+    post_norms: bool = False      # gemma2 post-attn/post-ffn norms
+    # family-specific sub-configs
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    # enc-dec (seamless-m4t)
+    enc_dec: bool = False
+    n_enc_layers: int = 0
+    # vlm (phi-3-vision): number of prepended patch-embedding positions
+    n_patches: int = 0
+    # audio (seamless): encoder consumes precomputed frame embeddings
+    frame_input: bool = False
+    embed_scale: bool = False     # gemma-family: x *= sqrt(d_model)
+    aux_loss_weight: float = 0.01  # MoE load-balance loss weight
+    # numerics
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    vocab_pad_to: int = 128       # pad embedding/vocab for TP divisibility
+    # distribution & performance knobs (hillclimbed in §Perf)
+    remat: str = "dots"           # none | dots | full
+    scan_layers: bool = True
+    gather_dtype: str = ""        # "" ⇒ param_dtype; "bfloat16" casts before FSDP all-gather
+
+    # ---- derived ----------------------------------------------------------
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up for clean TP sharding (standard production trick;
+        mamba2's 50280 and seamless's 256206 are not 16-divisible)."""
+        p = self.vocab_pad_to
+        return ((self.vocab + p - 1) // p) * p
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def pattern_of(self, layer: int) -> str:
+        return self.layer_pattern[layer % len(self.layer_pattern)]
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # -- parameter count (for roofline MODEL_FLOPS = 6·N·D) -------------------
+
+    def param_count(self, active_only: bool = False) -> int:
+        """Total (or MoE-active) parameter count, embeddings included."""
+        d, hd = self.d_model, self.hd
+        attn = d * (self.n_heads * hd) + 2 * d * (self.n_kv_heads * hd) \
+            + (self.n_heads * hd) * d
+        if self.qkv_bias:
+            attn += (self.n_heads + 2 * self.n_kv_heads) * hd
+        dense_ffn = 3 * d * self.d_ff if self.d_ff else 0
+        per_layer: Dict[str, int] = {}
+        per_layer["attn"] = attn + 2 * d + (2 * d if self.post_norms else 0) + dense_ffn
+        if self.moe is not None:
+            e = self.moe.num_experts if not active_only else self.moe.top_k
+            moe_ffn = 3 * d * self.moe.d_expert * (e + self.moe.num_shared)
+            router = d * self.moe.num_experts
+            per_layer["attn"] = attn + 2 * d + moe_ffn + router
+        if self.ssm is not None:
+            di = self.ssm.d_inner(d)
+            nh = self.ssm.n_heads(d)
+            per_layer["ssm"] = (d * (2 * di + 2 * self.ssm.d_state * (di // self.ssm.head_dim) + nh)
+                                + self.ssm.d_conv * (di + 2 * self.ssm.d_state * nh // nh)
+                                + di * d + 2 * nh + d)
+            # simpler, standard accounting: in_proj + out_proj dominate
+            per_layer["ssm"] = d * 2 * di + di * d + d * 2 * self.ssm.d_state + d
+        if self.rglru is not None:
+            w = self.rglru.lru_width or d
+            per_layer["rglru"] = d * w * 2 + w * d + 3 * w + 2 * d + dense_ffn
+        n = 0
+        for i in range(self.n_layers):
+            pat = self.pattern_of(i)
+            n += per_layer.get(pat, per_layer["attn"])
+        if self.enc_dec:
+            # encoder layers: self-attn + ffn; decoder adds cross-attn (already
+            # counted in n via n_layers = decoder layers)
+            enc = self.n_enc_layers * (attn + 2 * d + dense_ffn)
+            cross = self.n_layers * (attn + d)
+            n += enc + cross
+        n += self.vocab * d                       # embedding
+        if not self.tie_embeddings:
+            n += self.vocab * d                   # lm head
+        return n
+
+
+# ==========================================================================
+# Numerics helpers
+# ==========================================================================
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return cap * jnp.tanh(x / cap) if cap else x
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables for rotary embedding at given positions [..., L]."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs      # [..., L, half]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [..., L, H, hd]; cos/sin: [..., L, hd/2] (broadcast over H)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+# ==========================================================================
+# Initializers (params are plain nested dicts)
+# ==========================================================================
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 1.0) -> jax.Array:
+    std = scale / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def split_keys(key, names: Sequence[str]) -> Dict[str, jax.Array]:
+    ks = jax.random.split(key, len(names))
+    return dict(zip(names, ks))
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+
+def param_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))

@@ -1,0 +1,232 @@
+"""Blockwise (flash) attention with a flash backward — pure-jnp, O(L) memory.
+
+This is the memory enabler for the 32k-prefill and 4k-train cells: scores are
+never materialized beyond one ``[bq, bk]`` tile, and the custom VJP
+recomputes tiles in the backward pass instead of saving probabilities
+(FlashAttention-2 schedule).  The Pallas TPU kernel
+(:mod:`repro.kernels.flash_attention`) executes the same tiling on the MXU;
+this module is its oracle *and* the path the CPU dry-run lowers, so the
+compiled HLO reflects the memory/compute behaviour the kernel has on TPU.
+
+Layout: GQA-grouped — ``q: [B, Hkv, G, L, hd]``, ``k/v: [B, Hkv, S, hd]``.
+Supports causal masking, sliding windows (gemma2 local layers) and logit
+softcapping, all fused into the tile loop.
+
+Causal block skipping: the inner kv scan runs over all ``S//bk`` tiles with
+masking (simple, static); skipping the strictly-upper tiles is a §Perf
+hillclimb recorded in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def _tile_logits(qb, kb, scale: float, softcap: float):
+    """Raw tile logits (f32) + the capped value; returns (s_capped, s_pre)."""
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qb, kb,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap:
+        return softcap * jnp.tanh(s / softcap), s
+    return s, s
+
+
+def _tile_mask(i, j, bq: int, bk: int, causal: bool, window: int):
+    qpos = i * bq + jnp.arange(bq)[:, None]
+    kpos = j * bk + jnp.arange(bk)[None, :]
+    m = jnp.ones((bq, bk), bool)
+    if causal:
+        m &= kpos <= qpos
+    if window:
+        m &= kpos > qpos - window
+    return m
+
+
+def _blocks(x, n, b, axis):
+    """Split ``axis`` (length n*b) into leading scan dim: [..] -> [n, .., b, ..]."""
+    shape = list(x.shape)
+    shape[axis:axis + 1] = [n, b]
+    return jnp.moveaxis(x.reshape(shape), axis, 0)
+
+
+def _unblocks(x, axis):
+    """Inverse of _blocks: [n, .., b, ..] -> [.., n*b, ..]."""
+    x = jnp.moveaxis(x, 0, axis)
+    shape = list(x.shape)
+    shape[axis:axis + 2] = [shape[axis] * shape[axis + 1]]
+    return x.reshape(shape)
+
+
+# ==========================================================================
+# Forward
+# ==========================================================================
+
+
+def _flash_fwd_impl(q, k, v, *, causal: bool, window: int, softcap: float,
+                    bq: int, bk: int) -> Tuple[jax.Array, jax.Array]:
+    """Returns (out [B,Hkv,G,L,hd], lse [B,Hkv,G,L])."""
+    b, hkv, g, l, hd = q.shape
+    s_len = k.shape[2]
+    nq, nk = l // bq, s_len // bk
+    scale = 1.0 / (hd ** 0.5)
+    f32 = jnp.float32
+
+    kb_all = _blocks(k, nk, bk, 2)                      # [nk,B,Hkv,bk,hd]
+    vb_all = _blocks(v, nk, bk, 2)
+    qb_all = _blocks(q, nq, bq, 3)                      # [nq,B,Hkv,G,bq,hd]
+
+    def q_block(carry, xs):
+        qb, i = xs
+
+        def kv_block(acc, xs2):
+            kb, vb, j = xs2
+            m, lsum, o = acc
+            s_cap, _ = _tile_logits(qb, kb, scale, softcap)
+            mask = _tile_mask(i, j, bq, bk, causal, window)
+            s_cap = jnp.where(mask[None, None, None], s_cap, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s_cap, axis=-1))
+            p = jnp.exp(s_cap - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            lsum = lsum * corr + jnp.sum(p, axis=-1)
+            o = o * corr[..., None] + jnp.einsum(
+                "bkgqs,bksd->bkgqd", p.astype(vb.dtype), vb,
+                preferred_element_type=f32)
+            return (m_new, lsum, o), None
+
+        m0 = jnp.full((b, hkv, g, bq), NEG_INF, f32)
+        l0 = jnp.zeros((b, hkv, g, bq), f32)
+        o0 = jnp.zeros((b, hkv, g, bq, hd), f32)
+        (m, lsum, o), _ = jax.lax.scan(
+            kv_block, (m0, l0, o0), (kb_all, vb_all, jnp.arange(nk)))
+        lsum = jnp.maximum(lsum, 1e-37)
+        out_b = (o / lsum[..., None]).astype(q.dtype)
+        lse_b = m + jnp.log(lsum)
+        return carry, (out_b, lse_b)
+
+    _, (out, lse) = jax.lax.scan(q_block, None, (qb_all, jnp.arange(nq)))
+    return _unblocks(out, 3), _unblocks(lse, 3)
+
+
+# ==========================================================================
+# Backward (FlashAttention-2: recompute tiles; two sweeps)
+# ==========================================================================
+
+
+def _flash_bwd_impl(q, k, v, out, lse, do, *, causal: bool, window: int,
+                    softcap: float, bq: int, bk: int):
+    b, hkv, g, l, hd = q.shape
+    s_len = k.shape[2]
+    nq, nk = l // bq, s_len // bk
+    scale = 1.0 / (hd ** 0.5)
+    f32 = jnp.float32
+
+    delta = jnp.sum(do.astype(f32) * out.astype(f32), axis=-1)   # [B,Hkv,G,L]
+
+    qb_all = _blocks(q, nq, bq, 3)
+    dob_all = _blocks(do, nq, bq, 3)
+    lse_all = _blocks(lse, nq, bq, 3)
+    dl_all = _blocks(delta, nq, bq, 3)
+    kb_all = _blocks(k, nk, bk, 2)
+    vb_all = _blocks(v, nk, bk, 2)
+
+    def tile_ds(qb, kb, i, j, lse_b, dob, vb, dl_b):
+        """Recompute p for a tile and return (p, ds_pre) in f32."""
+        s_cap, s_pre = _tile_logits(qb, kb, scale, softcap)
+        mask = _tile_mask(i, j, bq, bk, causal, window)
+        s_cap = jnp.where(mask[None, None, None], s_cap, NEG_INF)
+        p = jnp.exp(s_cap - lse_b[..., None])                     # [.. bq,bk]
+        dp = jnp.einsum("bkgqd,bksd->bkgqs", dob.astype(f32), vb.astype(f32))
+        ds = p * (dp - dl_b[..., None])
+        if softcap:
+            ds = ds * (1.0 - jnp.square(jnp.tanh(s_pre / softcap)))
+        ds = jnp.where(mask[None, None, None], ds, 0.0)
+        return p, ds
+
+    # ---- dq sweep: per q block, accumulate over kv blocks --------------------
+    def dq_block(carry, xs):
+        qb, dob, lse_b, dl_b, i = xs
+
+        def kv(acc, xs2):
+            kb, vb, j = xs2
+            _, ds = tile_ds(qb, kb, i, j, lse_b, dob, vb, dl_b)
+            acc = acc + jnp.einsum("bkgqs,bksd->bkgqd", ds, kb.astype(f32)) * scale
+            return acc, None
+
+        acc0 = jnp.zeros((b, hkv, g, bq, hd), f32)
+        dqb, _ = jax.lax.scan(kv, acc0, (kb_all, vb_all, jnp.arange(nk)))
+        return carry, dqb.astype(q.dtype)
+
+    _, dq = jax.lax.scan(dq_block, None, (qb_all, dob_all, lse_all, dl_all,
+                                          jnp.arange(nq)))
+    dq = _unblocks(dq, 3)
+
+    # ---- dk/dv sweep: per kv block, accumulate over q blocks ------------------
+    def dkv_block(carry, xs):
+        kb, vb, j = xs
+
+        def qloop(acc, xs2):
+            qb, dob, lse_b, dl_b, i = xs2
+            dk_a, dv_a = acc
+            p, ds = tile_ds(qb, kb, i, j, lse_b, dob, vb, dl_b)
+            dv_a = dv_a + jnp.einsum("bkgqs,bkgqd->bksd", p, dob.astype(f32))
+            dk_a = dk_a + jnp.einsum("bkgqs,bkgqd->bksd", ds, qb.astype(f32)) * scale
+            return (dk_a, dv_a), None
+
+        z = jnp.zeros((b, hkv, bk, hd), f32)
+        (dkb, dvb), _ = jax.lax.scan(
+            qloop, (z, z), (qb_all, dob_all, lse_all, dl_all, jnp.arange(nq)))
+        return carry, (dkb.astype(k.dtype), dvb.astype(v.dtype))
+
+    _, (dk, dv) = jax.lax.scan(dkv_block, None, (kb_all, vb_all, jnp.arange(nk)))
+    return dq, _unblocks(dk, 2), _unblocks(dv, 2)
+
+
+# ==========================================================================
+# custom_vjp assembly
+# ==========================================================================
+
+
+@functools.lru_cache(maxsize=None)
+def _make_flash(causal: bool, window: int, softcap: float, bq: int, bk: int):
+    kw = dict(causal=causal, window=window, softcap=softcap, bq=bq, bk=bk)
+
+    @jax.custom_vjp
+    def f(q, k, v):
+        out, _ = _flash_fwd_impl(q, k, v, **kw)
+        return out
+
+    def fwd(q, k, v):
+        out, lse = _flash_fwd_impl(q, k, v, **kw)
+        return out, (q, k, v, out, lse)
+
+    def bwd(res, do):
+        q, k, v, out, lse = res
+        return _flash_bwd_impl(q, k, v, out, lse, do, **kw)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0, softcap: float = 0.0,
+                    block_q: int = 512, block_k: int = 512) -> jax.Array:
+    """q: [B,L,H,hd]; k,v: [B,S,Hkv,hd] → [B,L,H,hd] (GQA-grouped internally)."""
+    b, l, h, hd = q.shape
+    s_len, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    bq = min(block_q, l)
+    bk = min(block_k, s_len)
+    if l % bq or s_len % bk:
+        raise ValueError(f"flash: L={l}/S={s_len} must tile by ({bq},{bk})")
+    qg = jnp.moveaxis(q.reshape(b, l, hkv, g, hd), 1, 3)     # [B,Hkv,G,L,hd]
+    kg = jnp.moveaxis(k, 1, 2)                               # [B,Hkv,S,hd]
+    vg = jnp.moveaxis(v, 1, 2)
+    f = _make_flash(causal, int(window), float(softcap), bq, bk)
+    og = f(qg, kg, vg)
+    return jnp.moveaxis(og, 3, 1).reshape(b, l, h, hd)

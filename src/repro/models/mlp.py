@@ -1,0 +1,27 @@
+"""Gated-SiLU MLP (llama/gemma/mistral-family FFN)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init, split_keys
+
+
+def init(key, cfg: ModelConfig, d_ff: int = 0) -> Dict[str, Any]:
+    d_ff = d_ff or cfg.d_ff
+    ks = split_keys(key, ["gate", "up", "down"])
+    return {
+        "w_gate": dense_init(ks["gate"], cfg.d_model, d_ff, cfg.pdtype),
+        "w_up": dense_init(ks["up"], cfg.d_model, d_ff, cfg.pdtype),
+        "w_down": dense_init(ks["down"], d_ff, cfg.d_model, cfg.pdtype),
+    }
+
+
+def apply(params: Dict[str, Any], cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    ct = cfg.cdtype
+    g = jax.nn.silu(x @ params["w_gate"].astype(ct))
+    u = x @ params["w_up"].astype(ct)
+    return (g * u) @ params["w_down"].astype(ct)

@@ -1,0 +1,140 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrent block:  x → [branch1: linear → causal conv → RG-LRU] ⊙
+                      [branch2: linear → GeLU]  → out linear.
+
+RG-LRU:  r_t = σ(W_r ξ_t),  i_t = σ(W_i ξ_t),
+         a_t = exp(-c · softplus(Λ) · r_t)            (c = 8)
+         h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ ξ_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` over the linear recurrence
+(log-depth, TPU-friendly); the blocked variant is the Pallas target
+(:mod:`repro.kernels.rglru_scan`).  Decode carries an O(1) [B,W] state, which
+with the window-bounded local-attention layers makes recurrentgemma run the
+``long_500k`` cell.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init, split_keys
+
+C_FACTOR = 8.0
+
+
+def width(cfg: ModelConfig) -> int:
+    assert cfg.rglru is not None
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def init(key, cfg: ModelConfig) -> Dict[str, Any]:
+    g = cfg.rglru
+    w = width(cfg)
+    ks = split_keys(key, ["x", "gate", "conv", "r", "i", "lam", "out"])
+    return {
+        "w_x": dense_init(ks["x"], cfg.d_model, w, cfg.pdtype),
+        "w_gate": dense_init(ks["gate"], cfg.d_model, w, cfg.pdtype),
+        "conv_w": (jax.random.normal(ks["conv"], (g.conv_kernel, w), jnp.float32)
+                   * 0.1).astype(cfg.pdtype),
+        "conv_b": jnp.zeros((w,), cfg.pdtype),
+        "w_r": dense_init(ks["r"], w, w, cfg.pdtype),
+        "w_i": dense_init(ks["i"], w, w, cfg.pdtype),
+        # Λ init so that a^c ∈ ~(0.9, 0.999) at r=1 (paper's init range)
+        "lam": jnp.linspace(2.0, 6.0, w).astype(cfg.pdtype),
+        "w_out": dense_init(ks["out"], w, cfg.d_model, cfg.pdtype),
+    }
+
+
+def _gates(params, xi: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Returns (log_a [.., W] ≤ 0, gated input multiplier)."""
+    f32 = jnp.float32
+    r = jax.nn.sigmoid(xi.astype(f32) @ params["w_r"].astype(f32))
+    i = jax.nn.sigmoid(xi.astype(f32) @ params["w_i"].astype(f32))
+    log_a = -C_FACTOR * jax.nn.softplus(params["lam"].astype(f32)) * r
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return log_a, beta * i * xi.astype(f32)
+
+
+def scan_ref(log_a: jax.Array, b: jax.Array, h0: jax.Array | None = None) -> jax.Array:
+    """Linear recurrence h_t = exp(log_a_t)·h_{t-1} + b_t over axis 1 (fp32)."""
+    a = jnp.exp(log_a)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    return sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(k)) + b
+
+
+def apply(params: Dict[str, Any], cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """x: [B,L,D] → [B,L,D] (train / prefill)."""
+    y, _ = _apply_impl(params, cfg, x, collect_state=False)
+    return y
+
+
+def apply_with_state(params: Dict[str, Any], cfg: ModelConfig, x: jax.Array
+                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Prefill variant: also returns the decode state (h_last + conv tail)."""
+    return _apply_impl(params, cfg, x, collect_state=True)
+
+
+def _apply_impl(params: Dict[str, Any], cfg: ModelConfig, x: jax.Array,
+                collect_state: bool):
+    ct = cfg.cdtype
+    xi_raw = x @ params["w_x"].astype(ct)
+    xi = _causal_conv(xi_raw, params["conv_w"].astype(ct), params["conv_b"].astype(ct))
+    log_a, b = _gates(params, xi)
+    h = scan_ref(log_a, b)
+    gate = jax.nn.gelu(x @ params["w_gate"].astype(ct))
+    out = (h.astype(ct) * gate) @ params["w_out"].astype(ct)
+    if not collect_state:
+        return out, None
+    km1 = cfg.rglru.conv_kernel - 1
+    tail = xi_raw[:, -km1:, :]
+    pad = km1 - tail.shape[1]
+    if pad > 0:
+        tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+    return out, {"h": h[:, -1], "conv": tail.astype(ct)}
+
+
+# ==========================================================================
+# Decode
+# ==========================================================================
+
+
+def init_state(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    g = cfg.rglru
+    w = width(cfg)
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, g.conv_kernel - 1, w), cfg.cdtype),
+    }
+
+
+def decode_step(params: Dict[str, Any], cfg: ModelConfig, x: jax.Array,
+                state: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: [B,1,D] → ([B,1,D], state)."""
+    ct = cfg.cdtype
+    xi = (x[:, 0, :] @ params["w_x"].astype(ct))               # [B,W]
+    hist = jnp.concatenate([state["conv"], xi[:, None, :]], axis=1)
+    w = params["conv_w"].astype(ct)
+    xi = jnp.einsum("bkc,kc->bc", hist, w) + params["conv_b"].astype(ct)
+    log_a, b = _gates(params, xi)
+    h = jnp.exp(log_a) * state["h"] + b
+    gate = jax.nn.gelu(x[:, 0, :] @ params["w_gate"].astype(ct))
+    out = ((h.astype(ct) * gate) @ params["w_out"].astype(ct))[:, None, :]
+    return out, {"h": h, "conv": hist[:, 1:, :]}

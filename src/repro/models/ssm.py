@@ -1,0 +1,276 @@
+"""Mamba2 block — SSD (state-space duality) with the chunked algorithm.
+
+Faithful to arXiv:2405.21060 (single group, scalar-per-head A):
+  projections → [z | x | B | C | dt], causal depthwise conv over (x,B,C),
+  SSD recurrence  h_t = exp(dt_t·A) h_{t-1} + dt_t · (B_t ⊗ x_t),
+  y_t = C_t · h_t + D ⊙ x_t,  out = out_proj(y ⊙ silu(z)).
+
+HARDWARE ADAPTATION (DESIGN.md §3): the reference CUDA implementation fuses
+all five projections into one ``w_in`` GEMM.  Under SPMD that single output
+axis mixes five differently-sharded streams, and the z|x|B|C|dt split lands
+at non-tile-aligned offsets — GSPMD inserts a collective-permute storm
+(measured: 9.5k permutes on the 256-chip train_4k cell).  On TPU we keep the
+projections as separate matrices: z/x/dt shard over the model axis (head
+TP), B/C stay replicated, and the depthwise convs are per-stream — every
+split is shard-local and the SSD math is head-parallel with zero intra-layer
+collectives (only the standard out-proj psum remains).
+
+Training/prefill uses the **chunked dual form**: within a chunk the
+recurrence is a masked attention-like matmul (MXU-dense), across chunks a
+short `lax.scan` carries the [H,P,N] state — linear in sequence length, which
+is why mamba2 runs the ``long_500k`` cell that quadratic archs skip.
+The intra-chunk matmuls are the Pallas target (:mod:`repro.kernels.ssd_scan`).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init, split_keys
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    s = cfg.ssm
+    assert s is not None
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    return di, nh, s.head_dim, s.d_state
+
+
+def init(key, cfg: ModelConfig) -> Dict[str, Any]:
+    s = cfg.ssm
+    di, nh, p, n = dims(cfg)
+    ks = split_keys(key, ["z", "x", "B", "C", "dt", "cx", "cb", "cc", "out"])
+
+    def conv(k, ch):
+        return (jax.random.normal(k, (s.d_conv, ch), jnp.float32) * 0.1
+                ).astype(cfg.pdtype)
+
+    return {
+        # separate projections (see HARDWARE ADAPTATION note above)
+        "wz": dense_init(ks["z"], cfg.d_model, di, cfg.pdtype),
+        "wx": dense_init(ks["x"], cfg.d_model, di, cfg.pdtype),
+        "wb": dense_init(ks["B"], cfg.d_model, n, cfg.pdtype),
+        "wc": dense_init(ks["C"], cfg.d_model, n, cfg.pdtype),
+        "wdt": dense_init(ks["dt"], cfg.d_model, nh, cfg.pdtype),
+        "conv_x_w": conv(ks["cx"], di), "conv_x_b": jnp.zeros((di,), cfg.pdtype),
+        "conv_b_w": conv(ks["cb"], n), "conv_b_b": jnp.zeros((n,), cfg.pdtype),
+        "conv_c_w": conv(ks["cc"], n), "conv_c_b": jnp.zeros((n,), cfg.pdtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(cfg.pdtype),  # A = -exp
+        "D": jnp.ones((nh,), cfg.pdtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((nh,), 0.01))).astype(cfg.pdtype),
+        "w_out": dense_init(ks["out"], di, cfg.d_model, cfg.pdtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv, x: [B,L,C], w: [K,C]."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def _constrain(x, *spec):
+    from repro.parallel.mesh_ctx import constrain
+    return constrain(x, *spec)
+
+
+def _batch_model(cfg, x, model_dim: int):
+    """Constrain [B, ..., C] to batch on dim0, model axis on ``model_dim``."""
+    from repro.parallel.mesh_ctx import current_ctx
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    spec: list = [None] * x.ndim
+    spec[0] = tuple(ctx.batch_axes)
+    spec[model_dim] = ctx.model_axis
+    return _constrain(x, *spec)
+
+
+# ==========================================================================
+# Chunked SSD core (pure-jnp oracle & dry-run path)
+# ==========================================================================
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                C: jax.Array, chunk: int,
+                h0: jax.Array | None = None) -> Tuple[jax.Array, jax.Array]:
+    """x:[Bt,L,H,P] dt:[Bt,L,H] A:[H]<0  B,C:[Bt,L,N]  → (y:[Bt,L,H,P], h_last).
+
+    All recurrence math in fp32 (exponentials of cumulative sums).
+    """
+    bt, l, h, p = x.shape
+    n = B.shape[-1]
+    nc = l // chunk
+    f32 = jnp.float32
+    xc = x.reshape(bt, nc, chunk, h, p).astype(f32)
+    dtc = dt.reshape(bt, nc, chunk, h).astype(f32)
+    Bc = B.reshape(bt, nc, chunk, n).astype(f32)
+    Cc = C.reshape(bt, nc, chunk, n).astype(f32)
+    dA = dtc * A.astype(f32)                                   # [Bt,NC,Q,H] ≤ 0
+    cum = jnp.cumsum(dA, axis=2)                               # within-chunk cumulative
+
+    # ---- intra-chunk (dual / attention-like) --------------------------------
+    # M[i,j] = C_i·B_j · exp(cum_i - cum_j) · dt_j   for j ≤ i
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]        # [Bt,NC,Q,Q,H]
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)                 # [Bt,NC,Q,Q]
+    m = cb[..., None] * decay * dtc[:, :, None, :, :]          # [Bt,NC,Q,Q,H]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", m, xc)
+
+    # ---- chunk states -------------------------------------------------------
+    # S_c = Σ_j exp(cum_end - cum_j)·dt_j · B_j ⊗ x_j    [Bt,NC,H,P,N]
+    last = cum[:, :, -1:, :]                                   # [Bt,NC,1,H]
+    w = jnp.exp(last - cum) * dtc                              # [Bt,NC,Q,H]
+    S = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", w, Bc, xc)
+
+    # ---- inter-chunk scan ---------------------------------------------------
+    gamma = jnp.exp(last[:, :, 0, :])                          # [Bt,NC,H] chunk decay
+
+    def step(hprev, inputs):
+        g, s = inputs                                          # [Bt,H], [Bt,H,P,N]
+        hnew = hprev * g[:, :, None, None] + s
+        return hnew, hprev                                     # emit state *entering* chunk
+
+    h_init = (jnp.zeros((bt, h, p, n), f32) if h0 is None else h0.astype(f32))
+    h_last, h_in = jax.lax.scan(step, h_init,
+                                (jnp.moveaxis(gamma, 1, 0), jnp.moveaxis(S, 1, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 1)                            # [Bt,NC,H,P,N]
+
+    # ---- inter-chunk contribution: y += exp(cum_i)·C_i · h_in ---------------
+    y_inter = jnp.einsum("bcih,bcin,bchpn->bcihp", jnp.exp(cum), Cc, h_in)
+    y = (y_intra + y_inter).reshape(bt, l, h, p)
+    return y.astype(x.dtype), h_last
+
+
+# ==========================================================================
+# Block forward (train / prefill)
+# ==========================================================================
+
+
+def apply(params: Dict[str, Any], cfg: ModelConfig, xin: jax.Array) -> jax.Array:
+    y, _ = _apply_impl(params, cfg, xin, collect_state=False)
+    return y
+
+
+def apply_with_state(params: Dict[str, Any], cfg: ModelConfig, xin: jax.Array
+                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Prefill variant: also returns the decode state (h_last + conv tails)."""
+    return _apply_impl(params, cfg, xin, collect_state=True)
+
+
+def _apply_impl(params: Dict[str, Any], cfg: ModelConfig, xin: jax.Array,
+                collect_state: bool):
+    s = cfg.ssm
+    di, nh, p, n = dims(cfg)
+    ct = cfg.cdtype
+    bt, l, _ = xin.shape
+
+    z = _batch_model(cfg, xin @ params["wz"].astype(ct), 2)        # [B,L,di]
+    x_raw = _batch_model(cfg, xin @ params["wx"].astype(ct), 2)    # [B,L,di]
+    b_raw = xin @ params["wb"].astype(ct)                          # [B,L,N] repl
+    c_raw = xin @ params["wc"].astype(ct)
+    dt_raw = _batch_model(cfg, xin @ params["wdt"].astype(ct), 2)  # [B,L,H]
+
+    x = jax.nn.silu(_causal_conv(x_raw, params["conv_x_w"].astype(ct),
+                                 params["conv_x_b"].astype(ct)))
+    b = jax.nn.silu(_causal_conv(b_raw, params["conv_b_w"].astype(ct),
+                                 params["conv_b_b"].astype(ct)))
+    c = jax.nn.silu(_causal_conv(c_raw, params["conv_c_w"].astype(ct),
+                                 params["conv_c_b"].astype(ct)))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))   # [Bt,L,H]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = _batch_model(cfg, x.reshape(bt, l, nh, p), 2)             # heads → model
+    # pad to a chunk multiple; dt=0 on padding ⇒ identity state updates
+    q = min(s.chunk, l)
+    pad = (-l) % q
+    if pad:
+        xh_p = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        y, h_last = ssd_chunked(xh_p.astype(ct),
+                                jnp.pad(dt, ((0, 0), (0, pad), (0, 0))), A,
+                                jnp.pad(b, ((0, 0), (0, pad), (0, 0))),
+                                jnp.pad(c, ((0, 0), (0, pad), (0, 0))), q)
+        y = y[:, :l]
+    else:
+        y, h_last = ssd_chunked(xh.astype(ct), dt, A, b, c, q)
+    y = y + xh * params["D"].astype(ct)[None, None, :, None]
+    y = _batch_model(cfg, y.reshape(bt, l, di), 2) * jax.nn.silu(z)
+    out = y @ params["w_out"].astype(ct)                           # psum over di
+    if not collect_state:
+        return out, None
+
+    def tail(a):
+        t = a[:, -(s.d_conv - 1):, :]
+        pad = s.d_conv - 1 - t.shape[1]
+        return jnp.pad(t, ((0, 0), (pad, 0), (0, 0))) if pad > 0 else t
+
+    return out, {"h": h_last,
+                 "conv_x": tail(x_raw).astype(ct),
+                 "conv_b": tail(b_raw).astype(ct),
+                 "conv_c": tail(c_raw).astype(ct)}
+
+
+# ==========================================================================
+# Decode (O(1) state per token — enables long_500k)
+# ==========================================================================
+
+
+def init_state(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    s = cfg.ssm
+    di, nh, p, n = dims(cfg)
+    return {
+        "h": jnp.zeros((batch, nh, p, n), jnp.float32),
+        "conv_x": jnp.zeros((batch, s.d_conv - 1, di), cfg.cdtype),
+        "conv_b": jnp.zeros((batch, s.d_conv - 1, n), cfg.cdtype),
+        "conv_c": jnp.zeros((batch, s.d_conv - 1, n), cfg.cdtype),
+    }
+
+
+def _conv_step(hist: jax.Array, new: jax.Array, w: jax.Array, b: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    """One causal-conv step. hist: [B,K-1,C], new: [B,C] → (out [B,C], hist)."""
+    h = jnp.concatenate([hist, new[:, None, :]], axis=1)
+    out = jnp.einsum("bkc,kc->bc", h, w) + b
+    return out, h[:, 1:, :]
+
+
+def decode_step(params: Dict[str, Any], cfg: ModelConfig, xin: jax.Array,
+                state: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """xin: [B,1,D] → ([B,1,D], state)."""
+    s = cfg.ssm
+    di, nh, p, n = dims(cfg)
+    ct = cfg.cdtype
+    bt = xin.shape[0]
+    x0 = xin[:, 0, :]
+    z = x0 @ params["wz"].astype(ct)
+    x_raw = x0 @ params["wx"].astype(ct)
+    b_raw = x0 @ params["wb"].astype(ct)
+    c_raw = x0 @ params["wc"].astype(ct)
+    dt_raw = x0 @ params["wdt"].astype(ct)
+
+    x, cx = _conv_step(state["conv_x"], x_raw, params["conv_x_w"].astype(ct),
+                       params["conv_x_b"].astype(ct))
+    b, cb = _conv_step(state["conv_b"], b_raw, params["conv_b_w"].astype(ct),
+                       params["conv_b_b"].astype(ct))
+    c, cc = _conv_step(state["conv_c"], c_raw, params["conv_c_w"].astype(ct),
+                       params["conv_c_b"].astype(ct))
+    x, b, c = jax.nn.silu(x), jax.nn.silu(b), jax.nn.silu(c)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))   # [B,H]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = x.reshape(bt, nh, p).astype(jnp.float32)
+    dA = jnp.exp(dt * A)                                       # [B,H]
+    h = state["h"] * dA[:, :, None, None] \
+        + jnp.einsum("bh,bn,bhp->bhpn", dt, b.astype(jnp.float32), xh)
+    y = jnp.einsum("bn,bhpn->bhp", c.astype(jnp.float32), h)
+    y = y + xh * params["D"].astype(jnp.float32)[None, :, None]
+    y = (y.reshape(bt, di).astype(ct)) * jax.nn.silu(z)
+    out = (y @ params["w_out"].astype(ct))[:, None, :]
+    return out, {"h": h, "conv_x": cx, "conv_b": cb, "conv_c": cc}

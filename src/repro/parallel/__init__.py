@@ -1,0 +1,12 @@
+"""Distribution layer: mesh context, sharding rules, remat policies.
+
+The Jointλ mapping (DESIGN.md §2–3): a multi-pod mesh ``("pod","data","model")``
+is the jointcloud; FSDP/TP/EP sharding rules implement the majority-rule
+placement insight (reduce where the producers live), and the step-commit /
+failover machinery lives in :mod:`repro.train.commit`.
+"""
+
+from repro.parallel.mesh_ctx import (  # noqa: F401
+    MeshCtx, constrain, current_ctx, mesh_context, set_mesh_ctx)
+from repro.parallel.sharding import (  # noqa: F401
+    batch_spec, input_shardings, param_shardings, safe_spec)

@@ -1,0 +1,202 @@
+"""Sharding rules: one rule table serving all 10 architectures.
+
+Parameters are FSDP-sharded over ``fsdp_axes`` on their "depth" dimension and
+TP/EP-sharded over ``model_axis`` on their parallel dimension (heads / ffn /
+experts / vocab / lru width).  Every rule is *divisibility-guarded* — an axis
+that does not divide the dim is dropped, never errored — so the same table
+covers kv-head counts from 1 to 32 and vocabs from 32k to 256k (padded).
+
+Rules address the **trailing** dims of a leaf: scan-stacked parameters carry
+a leading ``[G, ...]`` group dim that always stays unsharded.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.parallel.mesh_ctx import MeshCtx
+
+# rule tokens
+_F = "__fsdp__"      # substitute ctx.fsdp_axes
+_M = "__model__"     # substitute ctx.model_axis
+_B = "__batch__"     # substitute ctx.batch_axes
+
+
+# Trailing-dim specs per parameter name.  ``None`` = replicated dim.
+_RULES: Dict[str, Tuple] = {
+    # top level
+    "embed": (_M, _F),            # [Vp, D]
+    "lm_head": (_F, _M),          # [D, Vp]
+    # attention
+    "wq": (_F, _M), "wk": (_F, _M), "wv": (_F, _M), "wo": (_M, _F),
+    "bq": (_M,), "bk": (_M,), "bv": (_M,),
+    # dense mlp
+    "w_gate": (_F, _M), "w_up": (_F, _M), "w_down": (_M, _F),
+    # ssm (mamba2) — separate projections (models/ssm.py HARDWARE ADAPTATION):
+    # z/x/dt streams TP over heads; B/C replicated; out-proj contracts the
+    # sharded inner dim (psum), like attention's wo.
+    "wz": (_F, _M), "wx": (_F, _M), "wdt": (_F, _M),
+    "wb": (_F, None), "wc": (_F, None),
+    "w_out": (_M, _F),
+    "conv_x_w": (None, _M), "conv_x_b": (_M,),
+    # rglru — lru width is the TP dim
+    "w_x": (_F, _M), "w_r": (None, _M), "w_i": (None, _M),
+    "conv_b": (_M,), "lam": (_M,),
+}
+
+# expert-parallel overrides for leaves under a "moe" subtree (not "shared")
+_MOE_RULES: Dict[str, Tuple] = {
+    "router": (_F, None),             # [D, E] — router math is fp32+replicated
+    "w_gate": (_M, _F, None),         # [E, D, F]
+    "w_up": (_M, _F, None),
+    "w_down": (_M, None, _F),         # [E, F, D]
+}
+
+# rglru conv weight [K, W]
+_RGLRU_CONV = {"conv_w": (None, _M)}
+
+
+def _resolve(entry, ctx: MeshCtx):
+    if entry == _F:
+        return ctx.fsdp_axes if len(ctx.fsdp_axes) > 1 else ctx.fsdp_axes[0]
+    if entry == _M:
+        return ctx.model_axis
+    if entry == _B:
+        return ctx.batch_axes if len(ctx.batch_axes) > 1 else ctx.batch_axes[0]
+    return entry
+
+
+def safe_spec(shape: Sequence[int], spec: Sequence, mesh: Mesh) -> P:
+    """Drop axes that don't divide their dim; keep everything else."""
+    out = []
+    for dim, entry in zip(shape, spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = tuple(entry) if isinstance(entry, (tuple, list)) else (entry,)
+        prod = int(np.prod([mesh.shape[a] for a in axes]))
+        if dim % prod != 0:
+            out.append(None)
+        else:
+            out.append(axes if len(axes) > 1 else axes[0])
+    out += [None] * (len(shape) - len(spec))
+    return P(*out)
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for k in path:
+        key = getattr(k, "key", None)
+        if key is None:
+            key = getattr(k, "idx", None)
+        names.append(str(key))
+    return tuple(names)
+
+
+def spec_for(path, leaf, ctx: MeshCtx) -> P:
+    names = _path_names(path)
+    name = names[-1]
+    in_moe = "moe" in names and "shared" not in names
+    in_rglru = "rec" in names
+    rule: Optional[Tuple] = None
+    if in_moe and name in _MOE_RULES:
+        rule = _MOE_RULES[name]
+    elif in_rglru and name in _RGLRU_CONV:
+        rule = _RGLRU_CONV[name]
+    elif name in _RULES:
+        rule = _RULES[name]
+    if rule is None:
+        return P()          # replicated (norm scales, conv, scalars)
+    rule = tuple(_resolve(e, ctx) for e in rule)
+    # right-align the rule onto the trailing dims
+    shape = np.shape(leaf)
+    lead = len(shape) - len(rule)
+    if lead < 0:
+        return P()
+    full = (None,) * lead + rule
+    return safe_spec(shape, full, ctx.mesh)
+
+
+def param_shardings(params: Any, ctx: MeshCtx):
+    """Pytree of NamedShardings matching ``params`` (works on SDS trees too)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(ctx.mesh, spec_for(path, leaf, ctx)),
+        params)
+
+
+def cache_shardings(cache: Any, ctx: MeshCtx):
+    """Decode-cache shardings.
+
+    KV rings shard batch over the batch axes and then the model axis over
+    (in preference order) kv-heads, else head_dim — head_dim is always
+    128/256-divisible, which is what keeps the 1.5 TB mistral/qwen 32k caches
+    inside v5e HBM even at kv=8 < |model|.  Recurrent states shard heads /
+    width over the model axis.
+    """
+    b_axes = tuple(ctx.batch_axes)
+    m = ctx.model_axis
+    msize = ctx.model_size
+
+    def rule(path, leaf) -> P:
+        names = _path_names(path)
+        name = names[-1]
+        shape = np.shape(leaf)
+        rank = len(shape)
+        if name == "pos" or rank == 0:
+            return P()
+        spec: list = [None] * rank
+        if name in ("k", "v", "mk", "mv"):
+            lead = rank - 4                           # (G,)B,S,H,hd
+            spec[lead] = b_axes
+            if ctx.shard_kv_seq and shape[lead + 1] % msize == 0:
+                spec[lead + 1] = m                    # flash-decoding layout
+            elif shape[lead + 2] % msize == 0:
+                spec[lead + 2] = m
+            elif shape[lead + 3] % msize == 0:
+                spec[lead + 3] = m
+        elif name == "h" and rank >= 4:               # ssm: (G,)B,H,P,N
+            lead = rank - 4
+            spec[lead] = b_axes
+            if shape[lead + 1] % msize == 0:
+                spec[lead + 1] = m
+        elif name == "h":                             # rglru: (G,)B,W
+            lead = rank - 2
+            spec[lead] = b_axes
+            if shape[lead + 1] % msize == 0:
+                spec[lead + 1] = m
+        elif name.startswith("conv"):                 # (G,)B,K-1,C
+            lead = rank - 3
+            spec[lead] = b_axes
+            if shape[lead + 2] % msize == 0:
+                spec[lead + 2] = m
+        else:
+            return P()
+        return safe_spec(shape, spec, ctx.mesh)
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(ctx.mesh, rule(p, l)), cache)
+
+
+def batch_spec(ctx: MeshCtx, rank: int, *, batch_dim: int = 0) -> P:
+    """Batch-sharded activation spec: dim0 over batch axes, rest replicated."""
+    entries: list = [None] * rank
+    entries[batch_dim] = (ctx.batch_axes if len(ctx.batch_axes) > 1
+                          else ctx.batch_axes[0])
+    return P(*entries)
+
+
+def input_shardings(ctx: MeshCtx, tree: Any):
+    """Shard every input leaf on its leading (batch) dim, guarded."""
+
+    def one(leaf):
+        shape = np.shape(leaf)
+        if not shape:
+            return NamedSharding(ctx.mesh, P())
+        spec = safe_spec(shape, [tuple(ctx.batch_axes)], ctx.mesh)
+        return NamedSharding(ctx.mesh, spec)
+
+    return jax.tree.map(one, tree)

@@ -1,0 +1,5 @@
+"""Serving substrate: prefill/decode with sharded KV caches, plus the
+ByRedundant straggler-mitigated serving workflow (paper §3.3/§4.3.2)."""
+
+from repro.serve.engine import (  # noqa: F401
+    greedy_generate, make_decode_step, make_prefill_step)

@@ -1,0 +1,49 @@
+"""Prefill/decode serving engine.
+
+``make_prefill_step`` / ``make_decode_step`` are the functions the
+``prefill_*`` / ``decode_*`` / ``long_*`` dry-run cells lower.  The decode
+step processes one token for the whole batch against the sharded KV cache
+(:func:`repro.parallel.sharding.cache_shardings`).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.common import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig, *, max_len: int):
+    def prefill_step(params, inputs: Dict[str, jax.Array]):
+        cache, logits = lm.prefill(params, cfg, inputs["tokens"],
+                                   max_len=max_len,
+                                   patches=inputs.get("patches"),
+                                   frames=inputs.get("frames"))
+        return cache, logits
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, token: jax.Array, cache):
+        return lm.decode_step(params, cfg, token, cache)
+    return decode_step
+
+
+def greedy_generate(params, cfg: ModelConfig, prompt: jax.Array, steps: int, *,
+                    max_len: Optional[int] = None) -> jax.Array:
+    """Greedy decoding loop (examples / integration tests — not the dry-run)."""
+    b, l = prompt.shape
+    max_len = max_len or (l + steps)
+    cache, logits = lm.prefill(params, cfg, prompt, max_len=max_len)
+    decode = jax.jit(functools.partial(lm.decode_step, cfg=cfg))
+
+    toks = [jnp.argmax(logits, axis=-1)[:, None]]
+    for _ in range(steps - 1):
+        logits, cache = decode(params, token=toks[-1], cache=cache)
+        toks.append(jnp.argmax(logits, axis=-1)[:, None])
+    return jnp.concatenate(toks, axis=1)

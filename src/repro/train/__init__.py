@@ -1,0 +1,10 @@
+"""Training substrate: sharded AdamW, the train step, checkpoint/commit.
+
+The step-commit protocol (:mod:`repro.train.commit`) is the Jointλ
+exactly-once protocol (paper §4.1) applied to training: a step's checkpoint
+write is the *output data checkpoint* and the hand-off to the next stage is
+the *invocation checkpoint* — duplicated/retried steps collapse to one.
+"""
+
+from repro.train.optim import adamw_init, adamw_update  # noqa: F401
+from repro.train.step import TrainState, make_train_step, train_state_shapes  # noqa: F401

@@ -1,0 +1,153 @@
+"""Step-commit training: the Jointλ exactly-once protocol as the trainer's
+commit protocol (DESIGN.md §2 layer 2 — "jointcloud of pods").
+
+The training loop is expressed as a Jointλ workflow on the real-execution
+backend (:mod:`repro.backends.localjax`):
+
+  * one workflow function, ``train_chunk``, advances the model K steps and
+    writes an atomic checkpoint — the checkpoint is the chunk's **output
+    data checkpoint** (Fig 7): a crashed/duplicated chunk reuses the stored
+    result instead of re-training, so every chunk commits exactly once;
+  * the chunk invokes its own successor through the **invocation
+    checkpoint** (Fig 8) — at-most-once hand-off — via a Cycle edge guarded
+    by ``step < total``;
+  * two controllers ("pods") host the chunk function; the ``Failover`` field
+    retargets the next chunk when the primary controller is down (§4.2), and
+    the restarted chunk restores from the last committed checkpoint — the
+    degraded-mesh resume path;
+  * because the data pipeline is stateless (batch = f(seed, step)), replayed
+    chunks consume identical data: determinism makes at-most-once data
+    production meaningful for training.
+
+Straggler mitigation at this level is the paper's ByRedundant primitive:
+``redundant=True`` races the chunk on both controllers; the checkpoint's
+conditional-create picks the first finisher and the loser's work collapses.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.backends.localjax import LocalRunner, deploy_local
+from repro.backends.simcloud import Workload
+from repro.core.subgraph import WorkflowSpec
+from repro.data.synthetic import make_batch
+from repro.models.common import ModelConfig
+from repro.train import checkpoint as ckpt
+from repro.train.step import make_train_step, train_state_init
+
+
+PRIMARY = "aws/lambda"         # "pod controller A"
+BACKUP = "aliyun/fc"           # "pod controller B"
+
+
+@dataclass
+class CommitResult:
+    step: int
+    loss: float
+    ckpt_path: str
+    wall_s: float
+    controller_attempts: int = 1
+
+
+class CommittedTrainer:
+    """Drive training as an exactly-once Jointλ workflow."""
+
+    def __init__(self, cfg: ModelConfig, *, seq_len: int, global_batch: int,
+                 ckpt_dir: str, steps_per_chunk: int = 10, lr: float = 3e-4,
+                 seed: int = 0, redundant: bool = False,
+                 on_chunk: Optional[Callable[[int, float], None]] = None):
+        self.cfg = cfg
+        self.seq_len = seq_len
+        self.global_batch = global_batch
+        self.ckpt_dir = ckpt_dir
+        self.k = steps_per_chunk
+        self.seed = seed
+        self.on_chunk = on_chunk
+        self._state = None                       # in-process state cache
+        self._step_fn = jax.jit(make_train_step(cfg, lr=lr))
+        self.metrics: list = []
+        self.runner = LocalRunner()
+        self.redundant = redundant
+
+    # ---- the user function of the workflow ---------------------------------
+
+    def _train_chunk(self, req: Dict[str, Any]) -> Dict[str, Any]:
+        t0 = time.time()
+        step = int(req["step"])
+        total = int(req["total"])
+        if self._state is None or int(self._state["step"]) != step:
+            # cold start or post-failover restore from the last commit
+            template = jax.eval_shape(
+                lambda: train_state_init(jax.random.PRNGKey(self.seed), self.cfg))
+            if ckpt.latest_step(self.ckpt_dir) is not None:
+                self._state = ckpt.restore(template, self.ckpt_dir)
+            else:
+                self._state = train_state_init(jax.random.PRNGKey(self.seed),
+                                               self.cfg)
+        state = self._state
+        losses = []
+        for s in range(step, min(step + self.k, total)):
+            batch = {k: np.asarray(v) for k, v in make_batch(
+                self.cfg, self.seq_len, self.global_batch, step=s,
+                seed=self.seed).items()}
+            state, m = self._step_fn(state, batch)
+            losses.append(float(m["loss"]))
+        self._state = state
+        new_step = int(state["step"])
+        path = ckpt.save(state, self.ckpt_dir, new_step)
+        out = {"step": new_step, "total": total,
+               "loss": float(np.mean(losses)), "ckpt": path,
+               "wall_s": time.time() - t0}
+        self.metrics.append(out)
+        if self.on_chunk:
+            self.on_chunk(new_step, out["loss"])
+        return out
+
+    # ---- workflow wiring -----------------------------------------------------
+
+    def _spec(self, total: int) -> WorkflowSpec:
+        spec = WorkflowSpec("train-commit", gc=False)
+        spec.function("train_chunk", PRIMARY, failover=[BACKUP],
+                      workload=Workload(fn=self._train_chunk))
+        spec.function("finalize", PRIMARY, failover=[BACKUP],
+                      workload=Workload(fn=lambda r: r))
+        if self.redundant:
+            spec.redundant("train_chunk", "train_chunk",
+                           replicas=[PRIMARY, BACKUP])
+        spec.cycle("train_chunk", "train_chunk",
+                   while_pred=lambda out: out["step"] < out["total"])
+        spec.sequence("train_chunk", "finalize")
+        return spec
+
+    def train(self, total_steps: int, *, fail_primary_at_chunk: Optional[int] = None
+              ) -> CommitResult:
+        """Run to ``total_steps``; optionally kill the primary controller
+        mid-run to exercise failover + restore."""
+        dep = deploy_local(self.runner, self._spec(total_steps))
+        start_step = ckpt.latest_step(self.ckpt_dir) or 0
+        self.runner.submit(PRIMARY, "train_chunk",
+                           {"workflow_id": f"train-{start_step}",
+                            "input": {"step": start_step, "total": total_steps}})
+        if fail_primary_at_chunk is not None:
+            chunks = [0]
+
+            def maybe_fail(step, loss):
+                chunks[0] += 1
+                if chunks[0] == fail_primary_at_chunk:
+                    self.runner.set_down(PRIMARY)
+                    self._state = None          # controller B starts cold
+            self.on_chunk = maybe_fail
+        t0 = time.time()
+        self.runner.run()
+        final = self.metrics[-1] if self.metrics else None
+        if final is None:
+            raise RuntimeError("training workflow made no progress")
+        return CommitResult(step=final["step"], loss=final["loss"],
+                            ckpt_path=final["ckpt"],
+                            wall_s=time.time() - t0)

@@ -1,0 +1,66 @@
+"""AdamW with global-norm clipping — sharded like the parameters (ZeRO-style).
+
+Plain pytree implementation (no optax dependency): m/v mirror the parameter
+tree, so :func:`repro.parallel.sharding.param_shardings` applies verbatim and
+optimizer state shards with its parameter (the FSDP axis owns its slice of
+m/v — optimizer math is embarrassingly local).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float) -> Tuple[Any, jax.Array]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gnorm
+
+
+def adamw_update(params, grads, opt, step, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1):
+    """One AdamW step. ``step`` is the 0-based step counter (bias correction
+    uses step+1). Returns (new_params, new_opt)."""
+    t = (step + 1).astype(jnp.float32)
+    c1 = 1.0 - jnp.power(b1, t)
+    c2 = 1.0 - jnp.power(b2, t)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / c1
+        vhat = v / c2
+        step_ = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay and p.ndim >= 2:          # no decay on norms/scalars
+            step_ = step_ + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step_).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, opt["m"], opt["v"])
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v}
+
+
+def cosine_lr(step, *, base_lr: float, warmup: int, total: int,
+              min_ratio: float = 0.1):
+    """Linear warmup → cosine decay (the standard pretraining schedule)."""
+    step = step.astype(jnp.float32)
+    warm = base_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warmup, warm, base_lr * cos)

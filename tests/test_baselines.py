@@ -1,0 +1,107 @@
+"""Baseline orchestrators: correctness + billing contracts."""
+
+import pytest
+
+from repro.backends import calibration as cal
+from repro.backends.simcloud import SimCloud, Workload
+from repro.baselines.lithops import lithops_makespan_ms, run_lithops_map
+from repro.baselines.statemachine import StateMachineOrchestrator
+from repro.baselines.xafcl import XAFCLOrchestrator
+from repro.baselines.xfaas import run_xfaas_sequence, xfaas_makespan_ms
+from repro.core.subgraph import WorkflowSpec
+
+AWS = "aws/lambda"
+ALI = "aliyun/fc"
+
+
+def _diamond(cloud_fn):
+    spec = WorkflowSpec("d", gc=False)
+    spec.function("a", cloud_fn(0), workload=Workload(fn=lambda x: x + 1))
+    spec.function("b", cloud_fn(1), workload=Workload(fn=lambda x: x * 2))
+    spec.function("c", cloud_fn(2), workload=Workload(fn=lambda x: x * 3))
+    spec.function("d", cloud_fn(3), workload=Workload(fn=lambda xs: sum(xs)))
+    spec.fanout("a", ["b", "c"])
+    spec.fanin(["b", "c"], "d")
+    return spec
+
+
+def test_statemachine_diamond_and_billing():
+    sim = SimCloud(seed=0)
+    orch = StateMachineOrchestrator(sim, _diamond(lambda i: AWS), cloud="aws")
+    run = orch.start(5)
+    sim.run()
+    d = [r for r in sim.records if r.function == "d" and r.status == "done"]
+    assert d and d[0].result == (5 + 1) * 2 + (5 + 1) * 3
+    # per-transition billing: 4 function dispatches = 4 transitions
+    assert sim.bill.counters["state_transitions"] == 4
+    assert sim.bill.transition_cost == pytest.approx(4 * cal.STATE_TRANSITION_PRICE)
+
+
+def test_statemachine_rejects_cross_cloud():
+    with pytest.raises(ValueError):
+        StateMachineOrchestrator(SimCloud(), _diamond(lambda i: ALI if i else AWS),
+                                 cloud="aws")
+
+
+def test_xafcl_cross_cloud_map_fanin():
+    spec = WorkflowSpec("mc", gc=False)
+    spec.function("m", AWS, workload=Workload(fn=lambda n: list(range(n))))
+    spec.function("w", ALI, workload=Workload(fn=lambda x: x * x))
+    spec.function("agg", AWS, workload=Workload(fn=sum))
+    spec.map("m", "w")
+    spec.fanin(["w"], "agg")
+    sim = SimCloud(seed=0)
+    orch = XAFCLOrchestrator(sim, spec, orch_cloud="aws")
+    run = orch.start(5)
+    sim.run()
+    aggs = [r for r in sim.records if r.function == "agg" and r.status == "done"]
+    assert aggs and aggs[0].result == sum(i * i for i in range(5))
+    assert orch.makespan_ms(run) > 0
+
+
+def test_xfaas_sequence():
+    sim = SimCloud(seed=0)
+    stages = [(AWS, Workload(fn=lambda x: x + 1)),
+              (ALI, Workload(fn=lambda x: x * 2))]
+    run = run_xfaas_sequence(sim, stages, 3)
+    sim.run()
+    last = [r for r in sim.records if r.function == f"{run}-s1"
+            and r.status == "done"]
+    assert last and last[0].result == 8
+    # 3 transitions per hop × 2 hops
+    assert sim.bill.counters["state_transitions"] == 6
+
+
+def test_lithops_map_agg():
+    sim = SimCloud(seed=0)
+    run = run_lithops_map(sim, ALI, Workload(fn=lambda x: x * 2), 4,
+                          agg=Workload(fn=lambda xs: sum(xs)))
+    sim.run()
+    aggs = [r for r in sim.records if r.function == f"{run}-agg"
+            and r.status == "done"]
+    assert aggs and aggs[0].result == sum(2 * i for i in range(4))
+    # workers paid the 500 ms runtime-init toll
+    w = [r for r in sim.records if r.function == f"{run}-worker"
+         and r.status == "done"]
+    assert all(r.t_end - r.t_start >= cal.LITHOPS_WORKER_INIT_MS for r in w)
+
+
+def test_billing_decomposition():
+    from repro.backends.billing import Bill
+    b = Bill()
+    b.charge_execution("aws", 1.0, 1000.0, 1e-5)
+    b.charge_invoke("aws")
+    b.charge_ds_write("aws", 2)
+    b.charge_ds_read("aliyun", 3)
+    b.charge_egress("aws", 1_000_000_000)
+    b.charge_transition("aws", 4)
+    b.charge_vm("m6g.2xlarge", 2.0)
+    d = b.breakdown()
+    assert d["exec"] == pytest.approx(1e-5)
+    assert d["ds_write"] == pytest.approx(2 * cal.TABLE_WRITE_PRICE)
+    assert d["egress"] == pytest.approx(cal.EGRESS_PRICE_PER_GB)
+    assert d["transitions"] == pytest.approx(4 * cal.STATE_TRANSITION_PRICE)
+    assert d["vm"] == pytest.approx(2 * cal.VM_PRICE["m6g.2xlarge"])
+    assert d["total"] == pytest.approx(sum(v for k, v in d.items()
+                                           if k != "total"))
+    assert b.orchestration_cost < b.total

@@ -1,0 +1,52 @@
+"""Table-2 datastore primitives: atomicity contracts the paper relies on."""
+
+import pytest
+
+from repro.backends.datastore import InMemoryDS, TableState
+
+
+def test_create_if_absent_once():
+    st = TableState("t")
+    assert st.create_if_absent("k", {"v": 1}) is True
+    assert st.create_if_absent("k", {"v": 2}) is False
+    assert st.get("k") == {"v": 1}
+
+
+def test_get_returns_copy():
+    st = TableState("t")
+    st.create_if_absent("k", {"v": [1]})
+    got = st.get("k")
+    got["v"].append(2)
+    assert st.get("k") == {"v": [1]}
+
+
+def test_append_and_get_list():
+    st = TableState("t")
+    assert st.append_and_get_list("l", ["a"]) == ["a"]
+    assert st.append_and_get_list("l", ["b", "c"]) == ["a", "b", "c"]
+
+
+def test_append_creates_if_absent():
+    """Fig-8 safety: append works even if the create was lost to a crash."""
+    st = TableState("t")
+    assert st.append_and_get_list("never-created", ["x"]) == ["x"]
+
+
+def test_bitmap():
+    ds = InMemoryDS()
+    assert ds.create_bitmap(3, "bm") is True
+    assert ds.create_bitmap(3, "bm") is False
+    assert ds.update_bitmap(1, "bm") == [False, True, False]
+    assert ds.update_bitmap(0, "bm") == [True, True, False]
+    assert ds.update_bitmap(2, "bm") == [True, True, True]
+
+
+def test_prefix_gc():
+    st = TableState("t")
+    for k in ("wf1/a-output", "wf1/b-ivk", "wf2/a-output"):
+        st.create_if_absent(k, 1)
+    keys = st.list_prefix("wf1/")
+    assert keys == ["wf1/a-output", "wf1/b-ivk"]
+    assert st.delete(keys) == 2
+    assert st.list_prefix("wf1/") == []
+    assert st.list_prefix("wf2/") == ["wf2/a-output"]

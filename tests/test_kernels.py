@@ -1,0 +1,139 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ==========================================================================
+# flash attention
+# ==========================================================================
+
+FLASH_CASES = [
+    # (b, l, h, hkv, hd, window, softcap, dtype, tol)
+    (2, 256, 8, 4, 64, 0, 0.0, jnp.float32, 2e-5),
+    (1, 512, 4, 1, 32, 0, 0.0, jnp.float32, 2e-5),
+    (2, 256, 8, 8, 64, 128, 0.0, jnp.float32, 2e-5),
+    (1, 256, 4, 2, 128, 0, 30.0, jnp.float32, 2e-5),
+    (1, 512, 8, 2, 64, 128, 50.0, jnp.float32, 2e-5),
+    (2, 256, 8, 4, 64, 0, 0.0, jnp.bfloat16, 2e-2),
+    (1, 256, 16, 16, 32, 64, 0.0, jnp.bfloat16, 2e-2),
+]
+
+
+@pytest.mark.parametrize("b,l,h,hkv,hd,window,cap,dtype,tol", FLASH_CASES)
+def test_flash_attention_vs_ref(b, l, h, hkv, hd, window, cap, dtype, tol):
+    ks = jax.random.split(jax.random.PRNGKey(l + h), 3)
+    q = _rand(ks[0], (b, l, h, hd), dtype)
+    k = _rand(ks[1], (b, l, hkv, hd), dtype)
+    v = _rand(ks[2], (b, l, hkv, hd), dtype)
+    out = ops.flash_attention(q, k, v, causal=True, window=window, softcap=cap,
+                              block_q=128, block_k=128)
+    expect = ref.flash_attention_ref(q, k, v, causal=True, window=window,
+                                     softcap=cap)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_block_shape_invariance():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (1, 512, 4, 64), jnp.float32)
+    k = _rand(ks[1], (1, 512, 2, 64), jnp.float32)
+    v = _rand(ks[2], (1, 512, 2, 64), jnp.float32)
+    o1 = ops.flash_attention(q, k, v, block_q=64, block_k=128)
+    o2 = ops.flash_attention(q, k, v, block_q=256, block_k=64)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+def test_flash_attention_rejects_ragged():
+    q = jnp.zeros((1, 100, 4, 64))
+    with pytest.raises(ValueError):
+        ops.flash_attention(q, q[:, :, :4], q[:, :, :4], block_q=64, block_k=64)
+
+
+# ==========================================================================
+# SSD scan (mamba2)
+# ==========================================================================
+
+SSD_CASES = [
+    # (bt, l, h, p, n, chunk, dtype, tol)
+    (2, 128, 4, 16, 32, 32, jnp.float32, 2e-4),
+    (1, 256, 2, 64, 128, 64, jnp.float32, 2e-4),
+    (2, 64, 8, 32, 16, 64, jnp.float32, 2e-4),
+    (1, 128, 4, 16, 32, 32, jnp.bfloat16, 5e-2),
+]
+
+
+@pytest.mark.parametrize("bt,l,h,p,n,chunk,dtype,tol", SSD_CASES)
+def test_ssd_scan_vs_ref(bt, l, h, p, n, chunk, dtype, tol):
+    ks = jax.random.split(jax.random.PRNGKey(l + p), 4)
+    x = _rand(ks[0], (bt, l, h, p), dtype)
+    dt = jax.nn.softplus(_rand(ks[1], (bt, l, h), jnp.float32))
+    a = -jnp.exp(jnp.linspace(0.0, 2.0, h))
+    bmat = _rand(ks[2], (bt, l, n), dtype)
+    cmat = _rand(ks[3], (bt, l, n), dtype)
+    y = ops.ssd_scan(x, dt, a, bmat, cmat, chunk=chunk)
+    y_ref = ref.ssd_scan_ref(x, dt, a, bmat, cmat, chunk)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_ssd_state_carry_across_chunks():
+    """Same data, different chunk sizes ⇒ same output (state carry correct)."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    bt, l, h, p, n = 1, 256, 2, 16, 32
+    x = _rand(ks[0], (bt, l, h, p), jnp.float32)
+    dt = jax.nn.softplus(_rand(ks[1], (bt, l, h), jnp.float32))
+    a = -jnp.exp(jnp.linspace(0.0, 1.0, h))
+    bmat = _rand(ks[2], (bt, l, n), jnp.float32)
+    cmat = _rand(ks[3], (bt, l, n), jnp.float32)
+    y32 = ops.ssd_scan(x, dt, a, bmat, cmat, chunk=32)
+    y128 = ops.ssd_scan(x, dt, a, bmat, cmat, chunk=128)
+    np.testing.assert_allclose(np.asarray(y32), np.asarray(y128),
+                               atol=5e-4, rtol=5e-4)
+
+
+# ==========================================================================
+# RG-LRU scan
+# ==========================================================================
+
+RGLRU_CASES = [
+    (2, 128, 64, 64, 64, jnp.float32, 1e-5),
+    (1, 512, 128, 128, 128, jnp.float32, 1e-5),
+    (2, 256, 64, 128, 32, jnp.float32, 1e-5),
+    (1, 128, 128, 32, 128, jnp.bfloat16, 2e-2),
+]
+
+
+@pytest.mark.parametrize("bt,l,w,bl,bw,dtype,tol", RGLRU_CASES)
+def test_rglru_scan_vs_ref(bt, l, w, bl, bw, dtype, tol):
+    ks = jax.random.split(jax.random.PRNGKey(w + l), 2)
+    # log_a ≤ 0 (decay); inputs modest so fp32 scan is well-conditioned
+    log_a = -jax.nn.softplus(_rand(ks[0], (bt, l, w), jnp.float32))
+    b = _rand(ks[1], (bt, l, w), dtype).astype(jnp.float32) * 0.1
+    h = ops.rglru_scan(log_a, b, block_l=bl, block_w=bw)
+    h_ref = ref.rglru_scan_ref(log_a, b)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               atol=tol, rtol=1e-3)
+
+
+def test_rglru_long_carry():
+    """Carry across many sequence tiles stays exact."""
+    ks = jax.random.split(jax.random.PRNGKey(9), 2)
+    log_a = -jax.nn.softplus(_rand(ks[0], (1, 1024, 32), jnp.float32))
+    b = _rand(ks[1], (1, 1024, 32), jnp.float32) * 0.1
+    h = ops.rglru_scan(log_a, b, block_l=64, block_w=32)
+    h_ref = ref.rglru_scan_ref(log_a, b)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               atol=1e-5, rtol=1e-3)

@@ -1,0 +1,65 @@
+"""Unique-ID / key derivation (paper §4.4, Fig 13)."""
+
+import pytest
+
+from repro.core.naming import (BITMAP_SUFFIX, Control, aggregator_bitmap_key,
+                               collaboration_key)
+
+
+def test_function_id_format():
+    c = Control("wf1", step=2, branch=(0, 1))
+    assert c.function_id("C") == "wf1/C_2-bindex-0+1"
+    assert c.output_key("C") == "wf1/C_2-bindex-0+1-output"
+    assert c.ivk_key("C") == "wf1/C_2-bindex-0+1-ivk"
+
+
+def test_workflow_prefix_is_gc_prefix():
+    c = Control("wfX", step=5, branch=(1,), iteration=2)
+    assert c.function_id("f").startswith("wfX/")
+
+
+def test_iteration_in_id():
+    c = Control("w", step=1).next_iteration(0)
+    assert "-it1" in c.function_id("loop")
+    c2 = c.next_iteration(0)
+    assert "-it2" in c2.function_id("loop")
+
+
+def test_push_pop_branch_roundtrip():
+    c = Control("w", step=0)
+    c1 = c.push_branch(0, 1).push_branch(1, 2)     # fig-13 style: 0, then +1
+    assert c1.branch == (0, 1)
+    # PopAndMerge at a depth-1 aggregator keeps the common prefix
+    agg = c1.pop_to_depth(1, 3)
+    assert agg.branch == (0,)
+    # all peers of the fan-in derive the same aggregator id
+    peer2 = c.push_branch(0, 1).push_branch(0, 2)
+    assert peer2.pop_to_depth(1, 3).function_id("A") == agg.function_id("A")
+
+
+def test_fig13_example_names():
+    """C and D at step 2 in branches 0/1: C_2-bindex-0 and D_2-bindex-1."""
+    root = Control("wf")
+    c = root.push_branch(0, 2)
+    d = root.push_branch(1, 2)
+    assert c.function_id("C").endswith("C_2-bindex-0")
+    assert d.function_id("D").endswith("D_2-bindex-1")
+    # nested fan-out pushes onto the stack: E_3-bindex-1+0
+    e = d.push_branch(0, 3)
+    assert e.function_id("E").endswith("E_3-bindex-1+0")
+
+
+def test_bitmap_key_independent_of_peer():
+    k1 = aggregator_bitmap_key("w", "agg", 3, (0,), 0)
+    k2 = aggregator_bitmap_key("w", "agg", 3, (0,), 0)
+    assert k1 == k2 and k1.endswith(BITMAP_SUFFIX)
+
+
+def test_collaboration_key_not_workflow_scoped():
+    k = collaboration_key("batch", ["a", "b"])
+    assert "w/" not in k and k.startswith("__collab__/")
+
+
+def test_control_dict_roundtrip():
+    c = Control("w", 3, (1, 0), 2)
+    assert Control.from_dict(c.to_dict()) == c

@@ -1,0 +1,191 @@
+"""Workflow-level integration on SimCloud: every primitive, placement, GC."""
+
+import pytest
+
+from repro.backends import shim
+from repro.backends.simcloud import Blob, SimCloud, Workload
+from repro.core import workflow as wf
+from repro.core.placement import best_placement, choose_flavor, majority_cloud
+from repro.core.subgraph import WorkflowSpec, compile_workflow
+
+AWS = "aws/lambda"
+ALI = "aliyun/fc"
+
+
+def _run(spec, input_value=0, seed=0):
+    sim = SimCloud(seed=seed)
+    dep = wf.deploy(sim, spec)
+    wid = dep.start(input_value)
+    sim.run()
+    return sim, dep, wid
+
+
+def test_sequence_cross_cloud():
+    spec = WorkflowSpec("seq")
+    spec.function("a", AWS, workload=Workload(fixed_ms=5, fn=lambda x: x + 1))
+    spec.function("b", ALI, workload=Workload(fixed_ms=5, fn=lambda x: x * 2))
+    spec.sequence("a", "b")
+    sim, dep, wid = _run(spec, 3)
+    assert dep.result_of(wid, "b") == 8
+
+
+def test_static_fanout_fanin():
+    spec = WorkflowSpec("diamond")
+    spec.function("a", AWS, workload=Workload(fn=lambda x: x))
+    for i, f in enumerate(["b", "c", "d"]):
+        spec.function(f, ALI if i % 2 else AWS,
+                      workload=Workload(fn=lambda x, i=i: x + i))
+    spec.function("agg", ALI, workload=Workload(fn=lambda xs: sorted(xs)))
+    spec.fanout("a", ["b", "c", "d"])
+    spec.fanin(["b", "c", "d"], "agg")
+    sim, dep, wid = _run(spec, 10)
+    assert dep.result_of(wid, "agg") == [10, 11, 12]
+    # exactly one aggregator execution (the bitmap-complete peer invokes it)
+    aggs = [r for r in dep.executions(wid) if r.function == "agg"
+            and r.status == "done"]
+    assert len(aggs) == 1
+
+
+def test_dynamic_map_fanin():
+    spec = WorkflowSpec("map")
+    spec.function("split", AWS, workload=Workload(fn=lambda n: list(range(n))))
+    spec.function("work", ALI, workload=Workload(fn=lambda x: x * x))
+    spec.function("agg", AWS, workload=Workload(fn=sum))
+    spec.map("split", "work")
+    spec.fanin(["work"], "agg")
+    sim, dep, wid = _run(spec, 6)
+    assert dep.result_of(wid, "agg") == sum(i * i for i in range(6))
+
+
+def test_choice_and_cycle():
+    spec = WorkflowSpec("loop")
+    spec.function("inc", AWS, workload=Workload(fn=lambda x: x + 1))
+    spec.function("even", ALI, workload=Workload(fn=lambda x: ("even", x)))
+    spec.function("odd", ALI, workload=Workload(fn=lambda x: ("odd", x)))
+    spec.cycle("inc", "inc", while_pred=lambda x: x < 5)
+    spec.choice("inc", [(lambda x: x % 2 == 0, "even"), (None, "odd")])
+    sim, dep, wid = _run(spec, 0)
+    assert dep.result_of(wid, "odd") == ("odd", 5)
+    assert dep.result_of(wid, "even") is None
+
+
+def test_large_fanout_grouped_checkpoints():
+    """>10 successors exercises the chunk-of-10 invocation checkpointing."""
+    n = 25
+    spec = WorkflowSpec("wide", gc=False)
+    spec.function("src", AWS, workload=Workload(fn=lambda x: list(range(n))))
+    spec.function("w", ALI, workload=Workload(fn=lambda x: x + 1))
+    spec.function("agg", AWS, workload=Workload(fn=sum))
+    spec.map("src", "w")
+    spec.fanin(["w"], "agg")
+    sim, dep, wid = _run(spec, 0)
+    assert dep.result_of(wid, "agg") == sum(range(1, n + 1))
+
+
+def test_indirect_transfer_over_quota():
+    """Payloads above the FaaS async quota go through the datastore."""
+    big = Blob(5_000_000, "big")
+    spec = WorkflowSpec("big")
+    spec.function("a", AWS, workload=Workload(fn=lambda x: big))
+    spec.function("b", ALI, workload=Workload(fn=lambda x: x.nbytes))
+    spec.sequence("a", "b")
+    sim, dep, wid = _run(spec)
+    assert dep.result_of(wid, "b") == 5_000_000
+
+
+def test_gc_sweeps_workflow_prefix():
+    spec = WorkflowSpec("gc-test", gc=True)
+    spec.function("a", AWS, workload=Workload(fn=lambda x: x))
+    spec.function("b", ALI, workload=Workload(fn=lambda x: x))
+    spec.sequence("a", "b")
+    sim, dep, wid = _run(spec)
+    leftovers = [k for st in sim.stores.values()
+                 for k in st.state.items if k.startswith(wid)]
+    assert leftovers == []
+
+
+def test_failover_to_backup():
+    spec = WorkflowSpec("fo")
+    spec.function("a", AWS, workload=Workload(fn=lambda x: x))
+    spec.function("b", ALI, failover=[AWS], workload=Workload(fn=lambda x: x + 1))
+    spec.sequence("a", "b")
+    sim = SimCloud(seed=1)
+    dep = wf.deploy(sim, spec)
+    sim.schedule_outage("aliyun", 0, 1e9)
+    wid = dep.start(1)
+    sim.run()
+    done = [r for r in dep.executions(wid) if r.function == "b"
+            and r.status == "done"]
+    assert done and done[0].faas == AWS
+    assert dep.result_of(wid, "b") == 2
+
+
+def test_redundant_first_wins():
+    spec = WorkflowSpec("red", gc=False)
+    spec.function("a", AWS, workload=Workload(fn=lambda x: x))
+    spec.function("b", ALI, workload=Workload(fixed_ms=30, fn=lambda x: x * 10))
+    spec.function("c", AWS, workload=Workload(fn=lambda x: x))
+    spec.redundant("a", "b", replicas=[ALI, AWS])
+    spec.sequence("b", "c")
+    sim, dep, wid = _run(spec, 4)
+    assert dep.result_of(wid, "c") == 40
+    # both replicas may run, but downstream executed exactly once
+    cs = [r for r in dep.executions(wid) if r.function == "c"
+          and r.status == "done"]
+    assert len(cs) == 1
+
+
+def test_bybatch_accumulates_across_workflows():
+    spec = WorkflowSpec("batcher", gc=False)
+    spec.function("produce", AWS, workload=Workload(fn=lambda x: x))
+    spec.function("consume", ALI, workload=Workload(fn=lambda xs: sorted(xs)))
+    spec.batch("produce", "consume", batch_size=3)
+    sim = SimCloud(seed=2)
+    dep = wf.deploy(sim, spec)
+    wids = [dep.start(i, t=i * 500.0) for i in range(7)]
+    sim.run()
+    consumed = [r.result for r in sim.records
+                if r.function == "consume" and r.status == "done"]
+    # 7 producers, batch=3 ⇒ exactly 2 consumer firings of 3 items each
+    assert len(consumed) == 2
+    assert all(len(c) == 3 for c in consumed)
+
+
+def test_no_global_graph_at_runtime():
+    """The NodeView must not reference other nodes' NodeViews (paper: the
+    function-side orchestrator sees only its local sub-graph)."""
+    spec = WorkflowSpec("iso")
+    spec.function("a", AWS, workload=Workload(fn=lambda x: x))
+    spec.function("b", ALI, workload=Workload(fn=lambda x: x))
+    spec.sequence("a", "b")
+    sim = SimCloud()
+    views = compile_workflow(spec, wf.catalog_from_simcloud(sim))
+    import repro.core.subgraph as sg
+    for v in views.values():
+        for info in v.next_funcs:
+            assert not isinstance(info, sg.NodeView)
+            assert isinstance(info.name, str)
+
+
+# ---- placement (§4.3.1 / §2.1) ---------------------------------------------
+
+
+def test_majority_rule():
+    assert majority_cloud(["aws", "aliyun", "aliyun"]) == "aliyun"
+    assert best_placement(["aws", "aliyun", "aliyun"]) == ("aliyun", 1)
+    # deterministic tie-break
+    assert majority_cloud(["b", "a"]) == "a"
+
+
+def test_heterogeneity_placement():
+    from repro.backends import calibration as cal
+    flavors = {"aws/lambda": cal.CPU_AWS, "aliyun/fc_gpu": cal.GPU_ALIYUN_8G}
+    fid, dur, usd = choose_flavor(flavors, compute_ms=1500.0)
+    assert fid == "aliyun/fc_gpu" and dur == pytest.approx(100.0)
+    # cost objective flips when the accelerator premium outweighs the speedup
+    pricey_gpu = cal.Flavor("gpu", price_per_gb_s=5e-4, speed=3.0, gpu=True,
+                            memory_gb=8.0)
+    fid_cost, _, _ = choose_flavor(
+        {"aws/lambda": cal.CPU_AWS, "x/gpu": pricey_gpu},
+        compute_ms=100.0, objective="cost")
+    assert fid_cost == "aws/lambda"
