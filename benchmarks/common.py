@@ -72,16 +72,18 @@ def video_spec(fanout: int, placement: str) -> WorkflowSpec:
     recog = "aliyun/fc_gpu4" if placement == "joint" else cpu
     spec = WorkflowSpec(f"video{fanout}-{placement}")
     spec.function("split", cpu, workload=Workload(
-        compute_ms=VIDEO_SPLIT_MS,
+        compute_ms=VIDEO_SPLIT_MS, accel=False, out_bytes=VIDEO_CHUNK.nbytes,
         fn=lambda x, k=fanout: [VIDEO_CHUNK] * k))
     for i in range(fanout):
         spec.function(f"extract{i}", cpu, workload=Workload(
-            compute_ms=FRAME_EXTRACT_MS, fn=lambda x: FRAME_BLOB))
+            compute_ms=FRAME_EXTRACT_MS, accel=False,
+            out_bytes=FRAME_BLOB.nbytes, fn=lambda x: FRAME_BLOB))
         spec.function(f"process{i}", cpu, workload=Workload(
-            compute_ms=FRAME_PROCESS_MS, fn=lambda x: PROC_BLOB))
+            compute_ms=FRAME_PROCESS_MS, accel=False,
+            out_bytes=PROC_BLOB.nbytes, fn=lambda x: PROC_BLOB))
         spec.sequence(f"extract{i}", f"process{i}")
     spec.function("recognize", recog, memory_gb=4.0 if placement == "joint" else 1.0,
-                  workload=Workload(compute_ms=RECOGNIZE_MS,
+                  workload=Workload(compute_ms=RECOGNIZE_MS, out_bytes=64,
                                     fn=lambda xs: {"labels": 42}))
     spec.fanout("split", [f"extract{i}" for i in range(fanout)])
     spec.fanin([f"process{i}" for i in range(fanout)], "recognize")
@@ -94,9 +96,10 @@ def qa_spec(placement: str) -> WorkflowSpec:
     infer = ALI_GPU if placement == "joint" else cpu
     spec = WorkflowSpec(f"qa-{placement}")
     spec.function("sort", cpu, workload=Workload(
-        compute_ms=QA_SORT_MS, fn=lambda x: QA_DOC))
+        compute_ms=QA_SORT_MS, accel=False, out_bytes=QA_DOC.nbytes,
+        fn=lambda x: QA_DOC))
     spec.function("qa", infer, memory_gb=8.0 if infer == ALI_GPU else 1.0,
-                  workload=Workload(compute_ms=QA_BERT_MS,
+                  workload=Workload(compute_ms=QA_BERT_MS, out_bytes=64,
                                     fn=lambda x: {"answers": 4}))
     spec.sequence("sort", "qa")
     return spec
@@ -108,7 +111,8 @@ def iot_spec(length: int) -> WorkflowSpec:
     for i in range(length):
         faas = AWS_CPU if i % 2 == 0 else ALI_CPU
         spec.function(f"f{i}", faas, workload=Workload(
-            fixed_ms=IOT_FN_MS, fn=lambda x: IOT_MSG))
+            fixed_ms=IOT_FN_MS, accel=False, out_bytes=IOT_MSG.nbytes,
+            fn=lambda x: IOT_MSG))
         if i:
             spec.sequence(f"f{i-1}", f"f{i}")
     return spec
@@ -118,11 +122,13 @@ def mc_spec(branches: int) -> WorkflowSpec:
     """Monte-Carlo π (§5.1, from xAFCL): map → process×N → aggregate."""
     spec = WorkflowSpec(f"mc{branches}", gc=False)
     spec.function("data_map", AWS_CPU, workload=Workload(
-        compute_ms=MC_MAP_MS, fn=lambda x, n=branches: [Blob(80_000, "part")] * n))
+        compute_ms=MC_MAP_MS, accel=False, out_bytes=80_000,
+        fn=lambda x, n=branches: [Blob(80_000, "part")] * n))
     spec.function("data_process", ALI_CPU, workload=Workload(
-        compute_ms=MC_PROC_MS, fn=lambda x: 0.785))
+        compute_ms=MC_PROC_MS, accel=False, out_bytes=8, fn=lambda x: 0.785))
     spec.function("data_aggregation", AWS_CPU, workload=Workload(
-        compute_ms=MC_AGG_MS, fn=lambda xs: 4 * sum(xs) / max(len(xs), 1)))
+        compute_ms=MC_AGG_MS, accel=False, out_bytes=8,
+        fn=lambda xs: 4 * sum(xs) / max(len(xs), 1)))
     spec.map("data_map", "data_process")
     spec.fanin(["data_process"], "data_aggregation")
     return spec

@@ -1,0 +1,157 @@
+"""Placement sweep: the four paper workflows under four placement strategies.
+
+For each workflow (video analytics, QA inference, IoT pipeline, Monte-Carlo)
+and each objective ∈ {makespan, cost}, run on SimCloud under:
+
+  * single-aws   — every function on AWS Lambda (cloud-A baseline)
+  * single-ali   — every function on AliYun FC CPU (cloud-B baseline)
+  * greedy       — per-stage ``choose_flavor`` (transfer-oblivious, the
+                   pre-planner behavior)
+  * planned      — ``plan_workflow`` (DAG-level: critical-path DP +
+                   majority-rule datastore co-placement + egress awareness)
+
+The workflow *source* function is pinned to AWS under every strategy (the
+paper's data-residency setup: the video/documents live in S3) — so the
+"single-ali" baseline and any cross-cloud placement pay real egress from
+the source, which is exactly the tension the planner optimizes.  A Pareto
+sweep over the makespan↔cost scalarization is re-simulated per workflow and
+emitted as JSON together with the strategy table and planned-vs-single-cloud
+dominance verdicts.
+
+    PYTHONPATH=src python benchmarks/placement_sweep.py [--out results/placement_sweep.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, os.path.dirname(__file__))
+
+from repro.backends.simcloud import SimCloud
+from repro.core import subgraph as sg
+from repro.core import workflow as wf
+from repro.core.placement import (choose_flavor, flavors_from_config,
+                                  pareto_frontier, plan_workflow)
+
+import common
+
+N_INSTANCES = 8
+SPACING_MS = 8000.0
+
+WORKFLOWS = {
+    "video": lambda: (common.video_spec(4, "aws"), {}),
+    "qa": lambda: (common.qa_spec("aws"), {}),
+    "iot": lambda: (common.iot_spec(8), {}),
+    "mc": lambda: (common.mc_spec(6), {"data_process": 6}),
+}
+
+
+def _single(spec: sg.WorkflowSpec, faas: str, pinned: dict) -> dict:
+    return {n: {"faas": pinned.get(n, (faas,))[0], "failover": (),
+                "memory_gb": None}
+            for n in spec.functions}
+
+
+def _greedy(spec: sg.WorkflowSpec, flavors: dict, objective: str,
+            pinned: dict) -> dict:
+    out = {}
+    for n, f in spec.functions.items():
+        if n in pinned:
+            out[n] = {"faas": pinned[n][0], "failover": (), "memory_gb": None}
+            continue
+        w = f.workload
+        fid, _, _ = choose_flavor(
+            flavors, getattr(w, "compute_ms", 0.0) or 0.0,
+            getattr(w, "fixed_ms", 0.0) or 0.0, objective,
+            None, getattr(w, "accel", True))
+        out[n] = {"faas": fid, "failover": (), "memory_gb": None}
+    return out
+
+
+def simulate(spec: sg.WorkflowSpec, overrides: dict) -> dict:
+    placed = sg.apply_placement(spec, overrides)
+    sim = SimCloud(seed=0)
+    dep = wf.deploy(sim, placed)
+    ids = [dep.start(0, t=i * SPACING_MS) for i in range(N_INSTANCES)]
+    sim.run()
+    spans = [dep.makespan_ms(w) for w in ids]
+    return {"makespan_ms": round(statistics.fmean(spans), 1),
+            "cost_usd_per_wf": sim.bill.total / N_INSTANCES}
+
+
+def sweep_workflow(name: str) -> dict:
+    spec, instances = WORKFLOWS[name]()
+    flavors = flavors_from_config()
+    # data residency: the workflow's input sits in the entry's home cloud
+    pinned = {spec.entry: (spec.functions[spec.entry].faas,)}
+    report: dict = {"strategies": {}, "dominates_single_cloud": {}}
+
+    for objective in ("makespan", "cost"):
+        plan = plan_workflow(spec, flavors, objective=objective,
+                             instances=instances, candidates=pinned)
+        rows = {
+            "single-aws": simulate(spec, _single(spec, common.AWS_CPU, pinned)),
+            "single-ali": simulate(spec, _single(spec, common.ALI_CPU, pinned)),
+            "greedy": simulate(spec, _greedy(spec, flavors, objective, pinned)),
+            "planned": {**simulate(spec, plan.overrides()),
+                        "assignment": plan.assignment,
+                        "est_makespan_ms": round(plan.est_makespan_ms, 1),
+                        "est_cost_usd": plan.est_cost_usd},
+        }
+        report["strategies"][objective] = rows
+        metric = "makespan_ms" if objective == "makespan" else "cost_usd_per_wf"
+        planned = rows["planned"][metric]
+        report["dominates_single_cloud"][objective] = sorted(
+            s for s in ("single-aws", "single-ali")
+            if planned < rows[s][metric])
+
+    frontier = []
+    for p in pareto_frontier(spec, flavors, instances=instances,
+                             candidates=pinned,
+                             weights=(0.0, 0.15, 0.3, 0.5, 0.7, 0.85, 1.0)):
+        simmed = simulate(spec, p.overrides())
+        frontier.append({**p.as_dict(), "sim_makespan_ms": simmed["makespan_ms"],
+                         "sim_cost_usd_per_wf": simmed["cost_usd_per_wf"]})
+    report["pareto"] = frontier
+    return report
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="results/placement_sweep.json")
+    args = ap.parse_args()
+
+    results = {"workflows": {}, "pareto_points_total": 0}
+    for name in WORKFLOWS:
+        rep = sweep_workflow(name)
+        results["workflows"][name] = rep
+        results["pareto_points_total"] += len(rep["pareto"])
+
+        print(f"\n=== {name} ===")
+        for objective, rows in rep["strategies"].items():
+            print(f"  objective={objective}")
+            for strat, r in rows.items():
+                print(f"    {strat:11s}: {r['makespan_ms']:8.1f} ms   "
+                      f"${r['cost_usd_per_wf'] * 1e6:9.2f}/M")
+            dom = rep["dominates_single_cloud"][objective]
+            print(f"    planned beats {dom or 'no single cloud'} on {objective}")
+        print(f"  pareto frontier ({len(rep['pareto'])} points):")
+        for p in rep["pareto"]:
+            print(f"    λ={p['weight']:.2f}  sim {p['sim_makespan_ms']:8.1f} ms  "
+                  f"${p['sim_cost_usd_per_wf'] * 1e6:9.2f}/M")
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1, sort_keys=True)
+    print(f"\nwrote {args.out} ({results['pareto_points_total']} pareto points"
+          f" across {len(WORKFLOWS)} workflows)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 verification (mirrors .github/workflows/ci.yml):
+#     ./ci.sh            run the full suite
+#     ./ci.sh -k kernel  any extra args are passed to pytest
+set -euo pipefail
+cd "$(dirname "$0")"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

@@ -1,9 +1,21 @@
-"""Heterogeneity-aware stage placement (paper Obs 1 & 2, Figs 1–2).
+"""Heterogeneity-aware placement (paper Obs 1 & 2, Figs 1–2, Fig 16).
 
-Given per-flavor speed/price models, place a BERT-class inference stage with
-``choose_flavor`` under both objectives, then run the resulting workflow on
-the simulated Jointcloud and compare against the single-cloud placements —
-the Fig 16 experiment as an API walkthrough.
+Two layers of the same mechanism:
+
+1. ``choose_flavor`` — per-stage: given per-flavor speed/price models, pick
+   the FaaS system for one BERT-class inference stage under each objective.
+2. ``plan_workflow`` — per-DAG: jointly place *every* node of the workflow,
+   accounting for inter-cloud transfer latency/egress and the majority-rule
+   datastore placement of fan-out groups.  Returns a
+   :class:`~repro.core.placement.PlacementPlan`; hand it to
+   ``workflow.deploy(sim, spec, plan=plan)`` (or apply it yourself with
+   ``subgraph.apply_placement(spec, plan.overrides())``).  A
+   ``pareto_frontier`` sweep exposes the makespan↔cost trade
+   (see benchmarks/placement_sweep.py for the four-workflow version).
+
+Both plans are then executed on the simulated Jointcloud and compared
+against the single-cloud placements — the Fig 16 experiment as an API
+walkthrough.
 
     PYTHONPATH=src python examples/crosscloud_inference.py
 """
@@ -14,55 +26,78 @@ sys.path.insert(0, "src")
 
 from repro.backends import calibration as cal
 from repro.backends.simcloud import SimCloud, Workload, Blob
-from repro.core.placement import choose_flavor, stage_cost
+from repro.core.placement import (choose_flavor, pareto_frontier,
+                                  plan_workflow, stage_cost)
 from repro.core.subgraph import WorkflowSpec
 from repro.core import workflow as wf
 
 BERT_MS = 1500.0        # reference CPU duration of the inference stage
+SORT_MS = 300.0
+DOC_BYTES = 40_000
 
 
-def build(infer_faas: str, mem: float) -> WorkflowSpec:
-    spec = WorkflowSpec(f"qa-{infer_faas.replace('/', '-')}", gc=False)
+def build(infer_faas: str = "aws/lambda", mem=None) -> WorkflowSpec:
+    spec = WorkflowSpec("qa", gc=False)
     spec.function("sort", "aws/lambda",
-                  workload=Workload(compute_ms=300, fn=lambda x: Blob(40_000)))
+                  workload=Workload(compute_ms=SORT_MS, accel=False,
+                                    out_bytes=DOC_BYTES,
+                                    fn=lambda x: Blob(DOC_BYTES)))
     spec.function("qa", infer_faas, memory_gb=mem,
-                  workload=Workload(compute_ms=BERT_MS, fn=lambda x: "42"))
+                  workload=Workload(compute_ms=BERT_MS, out_bytes=64,
+                                    fn=lambda x: "42"))
     spec.sequence("sort", "qa")
     return spec
+
+
+def run(spec: WorkflowSpec, plan=None):
+    sim = SimCloud(seed=0)
+    dep = wf.deploy(sim, spec, plan=plan)
+    wid = dep.start("doc")
+    sim.run()
+    return dep.makespan_ms(wid), sim.bill.total
 
 
 def main() -> None:
     sim0 = SimCloud()
     flavors = {fid: f.flavor for fid, f in sim0.faas.items()}
 
-    print("placement options for the inference stage (1500 ms CPU-reference):")
+    print("per-stage options for the inference stage (1500 ms CPU-reference):")
     for fid, fl in sorted(flavors.items()):
         dur, usd = stage_cost(fl, BERT_MS)
         print(f"  {fid:16s} speed×{fl.speed:5.1f}  → {dur:7.1f} ms, "
               f"${usd * 1e6:8.2f}/M")
-
     best_time, t_ms, _ = choose_flavor(flavors, BERT_MS, objective="makespan")
     best_cost, _, c_usd = choose_flavor(flavors, BERT_MS, objective="cost")
-    print(f"\nmakespan-optimal: {best_time} ({t_ms:.0f} ms)")
-    print(f"cost-optimal    : {best_cost} (${c_usd * 1e6:.2f}/M)")
+    print(f"per-stage makespan-optimal: {best_time} ({t_ms:.0f} ms); "
+          f"cost-optimal: {best_cost} (${c_usd * 1e6:.2f}/M)\n")
 
     results = {}
-    for label, faas, mem in [("single-cloud AWS", "aws/lambda", 1.0),
-                             ("single-cloud Ali", "aliyun/fc", 1.0),
-                             ("Jointλ placement", best_time,
-                              flavors[best_time].memory_gb)]:
-        sim = SimCloud(seed=0)
-        dep = wf.deploy(sim, build(faas, mem))
-        wid = dep.start("doc")
-        sim.run()
-        results[label] = (dep.makespan_ms(wid), sim.bill.total)
-        print(f"  {label:18s}: {results[label][0]:7.1f} ms, "
-              f"${results[label][1] * 1e6:8.2f}/M")
+    # single-cloud CPU baselines bill the paper's 1 GB configured memory
+    # (the config the Fig 2 GPU-cost anchoring assumes)
+    for label, overrides in [
+            ("single-cloud AWS", dict(infer_faas="aws/lambda", mem=1.0)),
+            ("single-cloud Ali", dict(infer_faas="aliyun/fc", mem=1.0))]:
+        results[label] = run(build(**overrides))
+    for objective in ("makespan", "cost"):
+        plan = plan_workflow(build(), flavors, objective=objective)
+        results[f"Jointλ plan ({objective})"] = run(build(), plan=plan)
+        print(f"plan[{objective}]: {plan.assignment}  "
+              f"(est {plan.est_makespan_ms:.0f} ms, "
+              f"${plan.est_cost_usd * 1e6:.2f}/M)")
+    print()
+    for label, (ms, usd) in results.items():
+        print(f"  {label:22s}: {ms:7.1f} ms, ${usd * 1e6:8.2f}/M")
 
-    speedup = results["single-cloud AWS"][0] / results["Jointλ placement"][0]
-    saving = 1 - results["Jointλ placement"][1] / results["single-cloud AWS"][1]
+    fast = results["Jointλ plan (makespan)"]
+    speedup = results["single-cloud AWS"][0] / fast[0]
+    saving = 1 - fast[1] / results["single-cloud AWS"][1]
     print(f"\nJointλ vs AWS-only: {speedup:.2f}× faster, {saving*100:.0f}% "
           f"cheaper (paper Fig 16: 3.3×, 65%)")
+
+    print("\npareto frontier (λ sweeps makespan↔cost):")
+    for p in pareto_frontier(build(), flavors):
+        print(f"  λ={p.weight:4.2f}  est {p.est_makespan_ms:7.1f} ms  "
+              f"${p.est_cost_usd * 1e6:8.2f}/M  {p.assignment}")
 
 
 if __name__ == "__main__":

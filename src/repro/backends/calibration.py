@@ -95,9 +95,14 @@ class Flavor:
 CPU_AWS = Flavor("aws_cpu", price_per_gb_s=1.66667e-5, speed=1.0)
 # AliYun CPU slightly faster per Fig 1's platform spread (QA: AC beats ASF)
 CPU_ALIYUN = Flavor("ali_cpu", price_per_gb_s=1.63850e-5, speed=1.15)
-# GPU flavors bill against (GPU-seconds · virtual GB) — folded into one rate,
-# calibrated so GPU BERT costs ≈40% of aws_cpu BERT (Fig 2: 61.9% saving).
-GPU_ALIYUN_4G = Flavor("ali_gpu4", price_per_gb_s=2.0e-5, speed=7.0, gpu=True, memory_gb=4.0)
+# GPU flavors bill against (GPU-seconds · virtual GB) — folded into one rate.
+# gpu8: calibrated so GPU BERT costs ≈40% of aws_cpu BERT at the benchmarks'
+# memory configs (1 GB CPU / 8 GB GPU, §5.1): $10.2e-6 vs $25.2e-6 (Fig 2:
+# 61.9% saving).  gpu4: 7× speedup (Fig 1's batch-2 anchor) priced below
+# gpu8 per unit of *accelerated* compute (≈5.1e-6 vs ≈6.7e-6 $/ref-second)
+# — the budget GPU tier, so makespan↔cost placement genuinely trades off
+# between gpu8 (faster) and gpu4 (cheaper).
+GPU_ALIYUN_4G = Flavor("ali_gpu4", price_per_gb_s=0.9e-5, speed=7.0, gpu=True, memory_gb=4.0)
 GPU_ALIYUN_8G = Flavor("ali_gpu8", price_per_gb_s=1.25e-5, speed=15.0, gpu=True, memory_gb=8.0)
 
 # --------------------------------------------------------------------------

@@ -122,14 +122,23 @@ class Workload:
     ``compute_ms`` scales with the flavor speed (Fig 1 heterogeneity);
     ``fixed_ms`` does not (I/O, (de)serialization).  ``fn`` produces the
     value-level output; if omitted the input is forwarded.
+
+    ``accel`` marks GPU-amenable compute (BERT/ResNet class): on a GPU
+    flavor a non-accel stage runs at CPU-reference speed — video splitting
+    does not get 15× faster by renting a GPU.  ``out_bytes`` is a static
+    hint of the output's wire size, consumed by the placement planner
+    (runtime sizing still uses the actual value via ``estimate_size``).
     """
 
     compute_ms: float = 0.0
     fixed_ms: float = 0.0
     fn: Optional[Callable[[Any], Any]] = None
+    out_bytes: Optional[int] = None
+    accel: bool = True
 
     def duration_ms(self, flavor: cal.Flavor) -> float:
-        return self.compute_ms / max(flavor.speed, 1e-9) + self.fixed_ms
+        speed = 1.0 if (flavor.gpu and not self.accel) else flavor.speed
+        return self.compute_ms / max(speed, 1e-9) + self.fixed_ms
 
     def output(self, data: Any) -> Any:
         return self.fn(data) if self.fn is not None else data

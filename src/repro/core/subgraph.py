@@ -266,8 +266,40 @@ class WorkflowCompileError(Exception):
     pass
 
 
-def compile_workflow(spec: WorkflowSpec, catalog: Catalog) -> Dict[str, NodeView]:
-    """Lower the global DAG into per-function local sub-graphs."""
+def apply_placement(spec: WorkflowSpec,
+                    overrides: Dict[str, Dict[str, Any]]) -> WorkflowSpec:
+    """Copy of ``spec`` with per-node ``faas``/``failover``/``memory_gb``
+    overridden — the hook a :class:`repro.core.placement.PlacementPlan`
+    (or any hand-written placement) applies through.  Edges, workloads and
+    the entry point are shared; only FunctionSpecs are rebuilt."""
+    unknown = set(overrides) - set(spec.functions)
+    if unknown:
+        raise WorkflowCompileError(
+            f"placement overrides reference unknown functions {sorted(unknown)}")
+    out = WorkflowSpec(spec.name, gc=spec.gc_enabled)
+    out.edges = list(spec.edges)
+    out.entry = spec.entry
+    for name, f in spec.functions.items():
+        ov = overrides.get(name, {})
+        out.functions[name] = FunctionSpec(
+            name=name,
+            faas=ov.get("faas", f.faas),
+            failover=tuple(ov.get("failover", f.failover)),
+            memory_gb=ov["memory_gb"] if "memory_gb" in ov else f.memory_gb,
+            output_store_kind=f.output_store_kind,
+            workload=f.workload)
+    return out
+
+
+def compile_workflow(spec: WorkflowSpec, catalog: Catalog,
+                     overrides: Optional[Dict[str, Dict[str, Any]]] = None
+                     ) -> Dict[str, NodeView]:
+    """Lower the global DAG into per-function local sub-graphs.
+
+    ``overrides`` (optional) re-places nodes via :func:`apply_placement`
+    before compilation."""
+    if overrides:
+        spec = apply_placement(spec, overrides)
     if spec.entry is None:
         raise WorkflowCompileError("workflow has no entry function")
     fns = spec.functions

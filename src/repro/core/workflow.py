@@ -91,7 +91,14 @@ class DeployedWorkflow:
 
 
 def deploy(sim: SimCloud, spec: sg.WorkflowSpec,
-           catalog: Optional[sg.Catalog] = None) -> DeployedWorkflow:
+           catalog: Optional[sg.Catalog] = None, *,
+           plan: Any = None) -> DeployedWorkflow:
+    """Compile and deploy ``spec``.  ``plan`` — a ``placement.PlacementPlan``
+    (or any object with ``.overrides()``) — re-places the workflow's nodes
+    before compilation; the returned DeployedWorkflow carries the re-placed
+    spec so makespan/bill queries see the effective placement."""
+    if plan is not None:
+        spec = sg.apply_placement(spec, plan.overrides())
     catalog = catalog or catalog_from_simcloud(sim)
     views = sg.compile_workflow(spec, catalog)
     # ByRedundant replicas are additional deployment targets of the dst fn

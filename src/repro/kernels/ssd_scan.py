@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import CompilerParams as _CompilerParams
+
 
 def _kernel(x_ref, dt_ref, da_ref, b_ref, c_ref, y_ref, h_ref, *, q: int):
     ic = pl.program_id(2)
@@ -99,7 +101,7 @@ def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, bmat: jax.Array,
         out_specs=pl.BlockSpec((1, q, 1, p), lambda b, ih, ic: (b, ic, ih, 0)),
         out_shape=jax.ShapeDtypeStruct((bt, l, h, p), x.dtype),
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="ssd_scan",

@@ -319,11 +319,12 @@ def _decode_seqshard(cfg: ModelConfig, q, k_new, v_new, cache_k, cache_v,
         out = (num / den[..., None]).astype(qs.dtype)
         return jnp.moveaxis(out, 3, 1).reshape(bl, l, h, hd), ck, cv
 
-    return jax.shard_map(
+    from repro.parallel.mesh_ctx import shard_map
+    return shard_map(
         shard,
         mesh=ctx.mesh,
         in_specs=(P_(batch), P_(batch), P_(batch),
                   P_(batch, m_ax), P_(batch, m_ax), P_()),
         out_specs=(P_(batch), P_(batch, m_ax), P_(batch, m_ax)),
-        check_vma=False,
+        check=False,
     )(q, k_new, v_new, cache_k, cache_v, pos)

@@ -196,13 +196,14 @@ def apply_ep(params: Dict[str, Any], cfg: ModelConfig, x: jax.Array, ctx) -> jax
         # in compute dtype (§Perf: halves the EP all-reduce wire vs f32)
         return jax.lax.psum(y_partial.astype(ct), ctx.model_axis)
 
-    y = jax.shard_map(
+    from repro.parallel.mesh_ctx import shard_map
+    y = shard_map(
         shard,
         mesh=ctx.mesh,
         in_specs=(P_(batch, None), P_(), P_(ctx.model_axis, None, None),
                   P_(ctx.model_axis, None, None), P_(ctx.model_axis, None, None)),
         out_specs=P_(batch, None),
-        check_vma=False,
+        check=False,
     )(x2d, params["router"], params["w_gate"], params["w_up"], params["w_down"])
 
     if m.num_shared:

@@ -1,17 +1,16 @@
-"""Property tests: exactly-once execution under adversarial crash schedules.
+"""Exactly-once execution under adversarial crash schedules (paper §4.1).
 
-The paper's §4.1 argument — at-least-once delivery ⊕ at-most-once data
-production ⊕ at-most-once invocation ⇒ exactly-once — is explored with
-hypothesis over (workflow shape × crash schedule × outage windows).  The
-SimCloud crash hook aborts executions *between* effects, covering the
-"most extreme scenario" (crash after the async invoke, before its
-checkpoint) explicitly.
+At-least-once delivery ⊕ at-most-once data production ⊕ at-most-once
+invocation ⇒ exactly-once.  This module carries the *deterministic*
+coverage: a fixed grid of crash schedules over the fan-out workflow plus
+the §4.1.2 "most extreme scenario".  The randomized hypothesis exploration
+of the same properties lives in ``test_exactly_once_prop.py`` (skipped when
+hypothesis is not installed).
 """
 
 import itertools
 
 import pytest
-from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.backends.simcloud import SimCloud, Workload
 from repro.core import workflow as wf
@@ -25,7 +24,7 @@ ALI = "aliyun/fc"
 # produced from exactly one execution's output.
 
 
-def _effectful_spec(fanout: int):
+def effectful_spec(fanout: int):
     """a → (w0..wk) → agg → tail, all side-effect-counting."""
     calls = {"tail": []}
     spec = WorkflowSpec("prop", gc=False)
@@ -40,20 +39,8 @@ def _effectful_spec(fanout: int):
     return spec, calls, fanout * (fanout + 1) // 2
 
 
-@settings(max_examples=25, deadline=None,
-          suppress_health_check=[HealthCheck.too_slow])
-@given(
-    fanout=st.integers(min_value=1, max_value=5),
-    crash_period=st.integers(min_value=3, max_value=60),
-    crash_count=st.integers(min_value=0, max_value=8),
-    seed=st.integers(min_value=0, max_value=10_000),
-)
-def test_exactly_once_under_crashes(fanout, crash_period, crash_count, seed):
-    spec, calls, expected = _effectful_spec(fanout)
-    sim = SimCloud(seed=seed)
-    dep = wf.deploy(sim, spec)
-
-    # crash policy: abort the n-th, 2n-th, ... effect transitions sim-wide
+def periodic_crash_policy(crash_period: int, crash_count: int):
+    """Abort the n-th, 2n-th, ... effect transitions sim-wide (≤ crash_count)."""
     counter = itertools.count(1)
     remaining = [crash_count]
 
@@ -65,7 +52,23 @@ def test_exactly_once_under_crashes(fanout, crash_period, crash_count, seed):
             return True
         return False
 
-    sim.crash_policy = crash
+    return crash
+
+
+@pytest.mark.parametrize("fanout,crash_period,crash_count,seed", [
+    (1, 3, 4, 0),        # tiny workflow, aggressive early crashes
+    (3, 5, 8, 7),        # mid fan-out, max crash budget
+    (5, 7, 3, 42),       # wide fan-out, sparse crashes
+    (4, 3, 0, 11),       # no crashes (baseline sanity)
+    (2, 4, 6, 1234),     # repeated crashes around the fan-in
+])
+def test_exactly_once_crash_schedule_smoke(fanout, crash_period, crash_count, seed):
+    """Deterministic slice of the hypothesis crash-schedule property."""
+    spec, calls, expected = effectful_spec(fanout)
+    sim = SimCloud(seed=seed)
+    dep = wf.deploy(sim, spec)
+
+    sim.crash_policy = periodic_crash_policy(crash_period, crash_count)
     wid = dep.start(0)
     sim.run()
     sim.crash_policy = None
@@ -89,15 +92,15 @@ def test_exactly_once_under_crashes(fanout, crash_period, crash_count, seed):
         assert agg_outputs == [{"v": expected}]
 
 
-@settings(max_examples=15, deadline=None,
-          suppress_health_check=[HealthCheck.too_slow])
-@given(
-    outage_start=st.floats(min_value=0.0, max_value=400.0),
-    outage_len=st.floats(min_value=10.0, max_value=2000.0),
-    seed=st.integers(min_value=0, max_value=10_000),
-)
-def test_exactly_once_under_outage_with_failover(outage_start, outage_len, seed):
-    """A whole-cloud outage mid-workflow: failover keeps the run exactly-once."""
+@pytest.mark.parametrize("outage_start,outage_len,seed", [
+    (0.0, 1500.0, 0),      # cloud down from the start, recovers mid-run
+    (60.0, 2000.0, 7),     # fails while b is in flight, stays down
+    (350.0, 10.0, 42),     # blip near the tail
+])
+def test_exactly_once_under_outage_with_failover_smoke(outage_start, outage_len,
+                                                       seed):
+    """Deterministic slice of the outage/failover property: a whole-cloud
+    outage mid-workflow must not break exactly-once."""
     spec = WorkflowSpec("outage", gc=False)
     spec.function("a", AWS, workload=Workload(fixed_ms=20, fn=lambda x: x + 1))
     spec.function("b", ALI, failover=[AWS],

@@ -1,0 +1,93 @@
+"""Property tests: exactly-once execution under adversarial crash schedules.
+
+The paper's §4.1 argument — at-least-once delivery ⊕ at-most-once data
+production ⊕ at-most-once invocation ⇒ exactly-once — is explored with
+hypothesis over (workflow shape × crash schedule × outage windows).  The
+SimCloud crash hook aborts executions *between* effects, covering the
+"most extreme scenario" (crash after the async invoke, before its
+checkpoint) explicitly.
+
+Deterministic (no-hypothesis) coverage of the same properties lives in
+``test_exactly_once.py``; this module skips wholesale when hypothesis is
+not installed.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.backends.simcloud import SimCloud, Workload
+from repro.core import workflow as wf
+from repro.core.subgraph import WorkflowSpec
+
+from test_exactly_once import AWS, ALI, effectful_spec, periodic_crash_policy
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(
+    fanout=st.integers(min_value=1, max_value=5),
+    crash_period=st.integers(min_value=3, max_value=60),
+    crash_count=st.integers(min_value=0, max_value=8),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_exactly_once_under_crashes(fanout, crash_period, crash_count, seed):
+    spec, calls, expected = effectful_spec(fanout)
+    sim = SimCloud(seed=seed)
+    dep = wf.deploy(sim, spec)
+
+    sim.crash_policy = periodic_crash_policy(crash_period, crash_count)
+    wid = dep.start(0)
+    sim.run()
+    sim.crash_policy = None
+
+    tails = [r for r in dep.executions(wid)
+             if r.function == "tail" and r.status == "done"]
+    # Completion is guaranteed only while crashes stay within the substrate's
+    # at-least-once retry budget (a function crashed MAX_RETRIES+1 times is
+    # legitimately dropped — sim.dropped).  Exactly-once must hold regardless.
+    if not sim.dropped:
+        assert calls["tail"].count(expected) >= 1
+    # exactly-once SEMANTICS: every completed tail observed the same value,
+    # and the workflow's data (checkpointed outputs) is single-valued
+    assert all(r.result == expected for r in tails)
+    # at-most-once data production: if agg committed, it committed once
+    agg_outputs = [s.state.get(k) for s in sim.stores.values()
+                   for k in s.state.items
+                   if "agg" in k and k.endswith("-output")]
+    assert len(agg_outputs) <= 1
+    if tails or agg_outputs:
+        assert agg_outputs == [{"v": expected}]
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(
+    outage_start=st.floats(min_value=0.0, max_value=400.0),
+    outage_len=st.floats(min_value=10.0, max_value=2000.0),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_exactly_once_under_outage_with_failover(outage_start, outage_len, seed):
+    """A whole-cloud outage mid-workflow: failover keeps the run exactly-once."""
+    spec = WorkflowSpec("outage", gc=False)
+    spec.function("a", AWS, workload=Workload(fixed_ms=20, fn=lambda x: x + 1))
+    spec.function("b", ALI, failover=[AWS],
+                  workload=Workload(fixed_ms=20, fn=lambda x: x * 2))
+    spec.function("c", AWS, workload=Workload(fixed_ms=20, fn=lambda x: x - 3))
+    spec.sequence("a", "b")
+    spec.sequence("b", "c")
+    sim = SimCloud(seed=seed)
+    dep = wf.deploy(sim, spec)
+    sim.schedule_outage("aliyun", outage_start, outage_start + outage_len)
+    wid = dep.start(5)
+    sim.run()
+    cs = [r for r in dep.executions(wid) if r.function == "c"
+          and r.status == "done"]
+    assert cs, "workflow must complete despite the outage"
+    assert all(r.result == (5 + 1) * 2 - 3 for r in cs)
+    # at-most-once invocation: downstream of b, c commits one output
+    c_outs = [s.state.get(k) for s in sim.stores.values()
+              for k in s.state.items if "/c_" in k and k.endswith("-output")]
+    assert len(c_outs) == 1

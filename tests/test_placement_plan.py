@@ -1,0 +1,193 @@
+"""DAG-level placement planner: plan quality, wiring, and Pareto sweep."""
+
+import pytest
+
+from repro.backends import calibration as cal
+from repro.backends.simcloud import Blob, SimCloud, Workload
+from repro.core import subgraph as sg
+from repro.core import workflow as wf
+from repro.core.placement import (PlacementPlan, choose_flavor,
+                                  flavors_from_config, pareto_frontier,
+                                  plan_workflow, stage_cost)
+
+AWS = "aws/lambda"
+ALI = "aliyun/fc"
+GPU8 = "aliyun/fc_gpu"
+GPU4 = "aliyun/fc_gpu4"
+
+
+def qa_spec():
+    """sort → BERT-qa; the BERT stage is GPU-amenable, sort is not."""
+    spec = sg.WorkflowSpec("qa", gc=False)
+    spec.function("sort", AWS, workload=Workload(
+        compute_ms=400, accel=False, out_bytes=40_000,
+        fn=lambda x: Blob(40_000)))
+    spec.function("qa", AWS, workload=Workload(
+        compute_ms=1500, out_bytes=64, fn=lambda x: "42"))
+    spec.sequence("sort", "qa")
+    return spec
+
+
+def fanout_spec():
+    """src → (w0 w1 w2) → agg (static fan-out/fan-in)."""
+    spec = sg.WorkflowSpec("fan", gc=False)
+    spec.function("src", AWS, workload=Workload(
+        compute_ms=50, accel=False, out_bytes=100_000,
+        fn=lambda x: [Blob(100_000)] * 3))
+    for i in range(3):
+        spec.function(f"w{i}", ALI, workload=Workload(
+            compute_ms=80, accel=False, out_bytes=1_000, fn=lambda x: 1))
+    spec.function("agg", AWS, workload=Workload(
+        compute_ms=20, accel=False, out_bytes=8, fn=lambda xs: sum(xs)))
+    spec.fanout("src", ["w0", "w1", "w2"])
+    spec.fanin(["w0", "w1", "w2"], "agg")
+    return spec
+
+
+# ---- accel semantics --------------------------------------------------------
+
+
+def test_stage_cost_accel_gates_gpu_speedup():
+    gpu = cal.GPU_ALIYUN_8G
+    dur_accel, _ = stage_cost(gpu, 1500.0, accel=True)
+    dur_plain, _ = stage_cost(gpu, 1500.0, accel=False)
+    assert dur_accel == pytest.approx(100.0)
+    assert dur_plain == pytest.approx(1500.0)
+    # choose_flavor must not send non-accel work to a GPU for speed
+    fid, _, _ = choose_flavor(flavors_from_config(), 1000.0, accel=False)
+    assert not flavors_from_config()[fid].gpu
+
+
+def test_workload_duration_respects_accel():
+    w = Workload(compute_ms=700, accel=False)
+    assert w.duration_ms(cal.GPU_ALIYUN_4G) == pytest.approx(700.0)
+    assert Workload(compute_ms=700).duration_ms(cal.GPU_ALIYUN_4G) \
+        == pytest.approx(100.0)
+
+
+# ---- plan_workflow ----------------------------------------------------------
+
+
+def test_plan_covers_all_nodes_and_objectives_order():
+    spec = qa_spec()
+    fast = plan_workflow(spec, objective="makespan")
+    cheap = plan_workflow(spec, objective="cost")
+    assert set(fast.assignment) == set(spec.functions)
+    assert set(cheap.assignment) == set(spec.functions)
+    assert fast.est_makespan_ms <= cheap.est_makespan_ms + 1e-9
+    assert cheap.est_cost_usd <= fast.est_cost_usd + 1e-12
+    # the GPU-amenable stage lands on a GPU flavor either way
+    assert fast.assignment["qa"] == GPU8
+    assert cheap.assignment["qa"] == GPU4
+
+
+def test_plan_respects_candidate_pinning():
+    spec = qa_spec()
+    plan = plan_workflow(spec, objective="makespan",
+                         candidates={"sort": (AWS,)})
+    assert plan.assignment["sort"] == AWS
+
+
+def test_plan_bad_objective_raises():
+    with pytest.raises(ValueError):
+        plan_workflow(qa_spec(), objective="latency")
+
+
+def test_cost_plan_coplaces_fanout_group_with_pinned_source():
+    """With the big-payload source pinned, the cost objective keeps the
+    fan-out group in the source's cloud — egress outweighs the cheaper
+    flavor (majority-rule co-placement + multi-start escape the per-stage
+    greedy's all-remote trap)."""
+    spec = fanout_spec()
+    plan = plan_workflow(spec, objective="cost",
+                         candidates={"src": (AWS,)})
+    assert {plan.assignment[n] for n in ("w0", "w1", "w2", "agg")} == {AWS}
+
+
+def test_planned_beats_single_cloud_on_simcloud():
+    spec = qa_spec()
+    results = {}
+    for label, ovr in [
+            ("aws", {n: {"faas": AWS, "failover": (), "memory_gb": None}
+                     for n in spec.functions}),
+            ("ali", {n: {"faas": ALI, "failover": (), "memory_gb": None}
+                     for n in spec.functions})]:
+        sim = SimCloud(seed=0)
+        dep = wf.deploy(sim, sg.apply_placement(spec, ovr))
+        wid = dep.start(0)
+        sim.run()
+        results[label] = (dep.makespan_ms(wid), sim.bill.total)
+
+    for objective, idx in (("makespan", 0), ("cost", 1)):
+        plan = plan_workflow(spec, objective=objective)
+        sim = SimCloud(seed=0)
+        dep = wf.deploy(sim, spec, plan=plan)
+        wid = dep.start(0)
+        sim.run()
+        planned = (dep.makespan_ms(wid), sim.bill.total)
+        assert planned[idx] < results["aws"][idx]
+        assert planned[idx] < results["ali"][idx]
+        # analytic estimate tracks the simulated truth loosely (same model
+        # family, jitter + queueing differ)
+        assert planned[0] == pytest.approx(plan.est_makespan_ms, rel=0.25)
+
+
+def test_plan_failover_is_cross_cloud():
+    plan = plan_workflow(qa_spec(), objective="makespan", with_failover=True)
+    from repro.backends import shim
+    for n, faas in plan.assignment.items():
+        for b in plan.failover.get(n, ()):
+            assert shim.cloud_of(b) != shim.cloud_of(faas)
+
+
+# ---- pareto -----------------------------------------------------------------
+
+
+def test_pareto_frontier_nondominated_and_sorted():
+    plans = pareto_frontier(qa_spec())
+    assert len(plans) >= 2          # gpu8 (fast) vs gpu4 (cheap)
+    for a, b in zip(plans, plans[1:]):
+        assert a.est_makespan_ms <= b.est_makespan_ms
+        assert a.est_cost_usd >= b.est_cost_usd  # else b would be dominated
+    assignments = [tuple(sorted(p.assignment.items())) for p in plans]
+    assert len(set(assignments)) == len(assignments)
+
+
+# ---- wiring -----------------------------------------------------------------
+
+
+def test_apply_placement_copies_and_overrides():
+    spec = qa_spec()
+    out = sg.apply_placement(spec, {"qa": {"faas": GPU8, "failover": (AWS,),
+                                           "memory_gb": None}})
+    assert out.functions["qa"].faas == GPU8
+    assert out.functions["qa"].failover == (AWS,)
+    assert out.functions["qa"].memory_gb is None
+    assert spec.functions["qa"].faas == AWS          # original untouched
+    assert out.functions["sort"].faas == AWS
+    assert out.entry == spec.entry and out.edges == spec.edges
+
+
+def test_apply_placement_unknown_function_raises():
+    with pytest.raises(sg.WorkflowCompileError):
+        sg.apply_placement(qa_spec(), {"nope": {"faas": AWS}})
+
+
+def test_compile_workflow_accepts_overrides():
+    catalog = sg.Catalog.from_config()
+    views = sg.compile_workflow(qa_spec(), catalog,
+                                overrides={"qa": {"faas": GPU8}})
+    assert views["qa"].faas == GPU8
+    # sort's successor metadata sees the override too
+    assert views["sort"].next_funcs[0].faas == GPU8
+
+
+def test_deploy_with_plan_runs_and_places():
+    spec = qa_spec()
+    plan = plan_workflow(spec, objective="makespan")
+    sim = SimCloud(seed=1)
+    dep = wf.deploy(sim, spec, plan=plan)
+    assert dep.views["qa"].faas == plan.assignment["qa"]
+    wid = dep.start(0)
+    sim.run()
+    assert dep.result_of(wid, "qa") == "42"
