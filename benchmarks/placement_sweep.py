@@ -1,24 +1,36 @@
-"""Placement sweep: the four paper workflows under four placement strategies.
+"""Placement sweep: the four paper workflows under N-cloud placement strategies.
 
 For each workflow (video analytics, QA inference, IoT pipeline, Monte-Carlo)
 and each objective ∈ {makespan, cost}, run on SimCloud under:
 
-  * single-aws   — every function on AWS Lambda (cloud-A baseline)
-  * single-ali   — every function on AliYun FC CPU (cloud-B baseline)
-  * greedy       — per-stage ``choose_flavor`` (transfer-oblivious, the
-                   pre-planner behavior)
-  * planned      — ``plan_workflow`` (DAG-level: critical-path DP +
-                   majority-rule datastore co-placement + egress awareness)
+  * single-<cloud> — every function on the cloud's CPU FaaS, one baseline
+                     per cloud of the chosen config (aws/aliyun, +gcp on
+                     the extended 3-cloud topology)
+  * greedy         — per-stage ``choose_flavor`` (transfer-oblivious, the
+                     pre-planner behavior)
+  * planned        — ``plan_workflow`` (DAG-level: critical-path DP +
+                     majority-rule datastore co-placement + egress awareness,
+                     all through the shared ``core.costmodel``)
+  * calibrated     — ``plan_workflow(profiles=...)`` re-planned from
+                     ``EdgeProfiles`` learned off the planned run's traces
+                     (the pilot-run feedback loop replacing static
+                     ``out_bytes`` hints)
 
 The workflow *source* function is pinned to AWS under every strategy (the
-paper's data-residency setup: the video/documents live in S3) — so the
-"single-ali" baseline and any cross-cloud placement pay real egress from
-the source, which is exactly the tension the planner optimizes.  A Pareto
-sweep over the makespan↔cost scalarization is re-simulated per workflow and
-emitted as JSON together with the strategy table and planned-vs-single-cloud
-dominance verdicts.
+paper's data-residency setup: the video/documents live in S3) — so remote
+baselines and any cross-cloud placement pay real egress from the source,
+which is exactly the tension the planner optimizes.  A Pareto sweep over the
+makespan↔cost scalarization is re-simulated per workflow and emitted as JSON
+together with the strategy table and planned-vs-single-cloud dominance
+verdicts.
 
-    PYTHONPATH=src python benchmarks/placement_sweep.py [--out results/placement_sweep.json]
+    PYTHONPATH=src python benchmarks/placement_sweep.py \
+        [--config default|extended] [--smoke] [--out results/placement_sweep.json]
+
+``--smoke`` forces the extended (≥3-cloud) config with a reduced instance
+count and exits non-zero unless (a) the planned placement is never worse
+than the best single cloud (within jitter tolerance) and (b) it strictly
+beats *every* single-cloud baseline on at least one workflow/objective.
 """
 
 from __future__ import annotations
@@ -32,16 +44,23 @@ import sys
 sys.path.insert(0, "src")
 sys.path.insert(0, os.path.dirname(__file__))
 
+from repro.backends import calibration as cal
 from repro.backends.simcloud import SimCloud
 from repro.core import subgraph as sg
 from repro.core import workflow as wf
+from repro.core.costmodel import EdgeProfiles, Topology
 from repro.core.placement import (choose_flavor, flavors_from_config,
                                   pareto_frontier, plan_workflow)
 
 import common
 
+CONFIGS = {
+    "default": cal.default_jointcloud,
+    "extended": cal.extended_jointcloud,
+}
 N_INSTANCES = 8
 SPACING_MS = 8000.0
+SMOKE_TOLERANCE = 1.05          # sim jitter headroom for "never worse"
 
 WORKFLOWS = {
     "video": lambda: (common.video_spec(4, "aws"), {}),
@@ -49,6 +68,12 @@ WORKFLOWS = {
     "iot": lambda: (common.iot_spec(8), {}),
     "mc": lambda: (common.mc_spec(6), {"data_process": 6}),
 }
+
+
+def cpu_faas_by_cloud(config: dict) -> dict:
+    """cloud → its first (CPU) FaaS id, the single-cloud baseline target."""
+    return {cname: f"{cname}/{next(iter(c['faas']))}"
+            for cname, c in config["clouds"].items() if c.get("faas")}
 
 
 def _single(spec: sg.WorkflowSpec, faas: str, pinned: dict) -> dict:
@@ -73,84 +98,148 @@ def _greedy(spec: sg.WorkflowSpec, flavors: dict, objective: str,
     return out
 
 
-def simulate(spec: sg.WorkflowSpec, overrides: dict) -> dict:
+def simulate(spec: sg.WorkflowSpec, overrides: dict, config: dict,
+             n_instances: int):
     placed = sg.apply_placement(spec, overrides)
-    sim = SimCloud(seed=0)
+    sim = SimCloud(config, seed=0)
     dep = wf.deploy(sim, placed)
-    ids = [dep.start(0, t=i * SPACING_MS) for i in range(N_INSTANCES)]
+    ids = [dep.start(0, t=i * SPACING_MS) for i in range(n_instances)]
     sim.run()
     spans = [dep.makespan_ms(w) for w in ids]
     return {"makespan_ms": round(statistics.fmean(spans), 1),
-            "cost_usd_per_wf": sim.bill.total / N_INSTANCES}
+            "cost_usd_per_wf": sim.bill.total / n_instances}, sim
 
 
-def sweep_workflow(name: str) -> dict:
+def sweep_workflow(name: str, config: dict, n_instances: int,
+                   with_pareto: bool = True) -> dict:
     spec, instances = WORKFLOWS[name]()
-    flavors = flavors_from_config()
+    flavors = flavors_from_config(config)
+    topology = Topology.from_config(config)
+    singles = cpu_faas_by_cloud(config)
     # data residency: the workflow's input sits in the entry's home cloud
     pinned = {spec.entry: (spec.functions[spec.entry].faas,)}
     report: dict = {"strategies": {}, "dominates_single_cloud": {}}
 
     for objective in ("makespan", "cost"):
         plan = plan_workflow(spec, flavors, objective=objective,
-                             instances=instances, candidates=pinned)
-        rows = {
-            "single-aws": simulate(spec, _single(spec, common.AWS_CPU, pinned)),
-            "single-ali": simulate(spec, _single(spec, common.ALI_CPU, pinned)),
-            "greedy": simulate(spec, _greedy(spec, flavors, objective, pinned)),
-            "planned": {**simulate(spec, plan.overrides()),
-                        "assignment": plan.assignment,
-                        "est_makespan_ms": round(plan.est_makespan_ms, 1),
-                        "est_cost_usd": plan.est_cost_usd},
-        }
+                             topology=topology, instances=instances,
+                             candidates=pinned)
+        rows = {}
+        for cloud, faas in sorted(singles.items()):
+            rows[f"single-{cloud}"], _ = simulate(
+                spec, _single(spec, faas, pinned), config, n_instances)
+        rows["greedy"], _ = simulate(
+            spec, _greedy(spec, flavors, objective, pinned), config, n_instances)
+        planned_metrics, planned_sim = simulate(
+            spec, plan.overrides(), config, n_instances)
+        rows["planned"] = {**planned_metrics,
+                           "assignment": plan.assignment,
+                           "est_makespan_ms": round(plan.est_makespan_ms, 1),
+                           "est_cost_usd": plan.est_cost_usd}
+        # trace-feedback loop: learn per-edge bytes / durations / Map widths
+        # from the planned run and re-plan with measured profiles
+        profiles = EdgeProfiles.from_records(planned_sim)
+        replan = plan_workflow(spec, flavors, objective=objective,
+                               topology=topology, instances=instances,
+                               profiles=profiles, candidates=pinned)
+        calibrated, _ = simulate(spec, replan.overrides(), config, n_instances)
+        rows["calibrated"] = {**calibrated,
+                              "assignment": replan.assignment,
+                              "est_makespan_ms": round(replan.est_makespan_ms, 1)}
         report["strategies"][objective] = rows
         metric = "makespan_ms" if objective == "makespan" else "cost_usd_per_wf"
         planned = rows["planned"][metric]
         report["dominates_single_cloud"][objective] = sorted(
-            s for s in ("single-aws", "single-ali")
-            if planned < rows[s][metric])
+            s for s in rows if s.startswith("single-")
+            and planned < rows[s][metric])
 
-    frontier = []
-    for p in pareto_frontier(spec, flavors, instances=instances,
-                             candidates=pinned,
-                             weights=(0.0, 0.15, 0.3, 0.5, 0.7, 0.85, 1.0)):
-        simmed = simulate(spec, p.overrides())
-        frontier.append({**p.as_dict(), "sim_makespan_ms": simmed["makespan_ms"],
-                         "sim_cost_usd_per_wf": simmed["cost_usd_per_wf"]})
-    report["pareto"] = frontier
+    if with_pareto:
+        frontier = []
+        for p in pareto_frontier(spec, flavors, topology=topology,
+                                 instances=instances, candidates=pinned,
+                                 weights=(0.0, 0.15, 0.3, 0.5, 0.7, 0.85, 1.0)):
+            simmed, _ = simulate(spec, p.overrides(), config, n_instances)
+            frontier.append({**p.as_dict(),
+                             "sim_makespan_ms": simmed["makespan_ms"],
+                             "sim_cost_usd_per_wf": simmed["cost_usd_per_wf"]})
+        report["pareto"] = frontier
+    else:
+        report["pareto"] = []
     return report
+
+
+def smoke_verdict(results: dict) -> int:
+    """0 iff planned is never worse than the best single cloud (within
+    tolerance) and strictly beats every single cloud somewhere."""
+    rc = 0
+    beats_all_somewhere = False
+    for name, rep in results["workflows"].items():
+        for objective, rows in rep["strategies"].items():
+            metric = ("makespan_ms" if objective == "makespan"
+                      else "cost_usd_per_wf")
+            singles = {s: r[metric] for s, r in rows.items()
+                       if s.startswith("single-")}
+            planned = rows["planned"][metric]
+            best_single = min(singles.values())
+            if planned > best_single * SMOKE_TOLERANCE:
+                print(f"[smoke] FAIL {name}/{objective}: planned {planned} "
+                      f"worse than best single cloud {best_single}")
+                rc = 1
+            if all(planned < v for v in singles.values()):
+                beats_all_somewhere = True
+    if not beats_all_somewhere:
+        print("[smoke] FAIL: planned never strictly beats every "
+              "single-cloud baseline")
+        rc = 1
+    if rc == 0:
+        print("[smoke] OK: planned ≥ best-single-cloud everywhere and "
+              "dominates all single clouds on ≥1 workflow/objective")
+    return rc
 
 
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", choices=sorted(CONFIGS), default="default")
+    ap.add_argument("--smoke", action="store_true",
+                    help="extended-config CI gate: fewer instances, no "
+                         "pareto resim, non-zero exit on regression")
     ap.add_argument("--out", default="results/placement_sweep.json")
     args = ap.parse_args()
+    if args.smoke:
+        args.config = "extended"
+    config = CONFIGS[args.config]()
+    n_instances = 3 if args.smoke else N_INSTANCES
 
-    results = {"workflows": {}, "pareto_points_total": 0}
+    results = {"config": args.config, "workflows": {},
+               "pareto_points_total": 0}
     for name in WORKFLOWS:
-        rep = sweep_workflow(name)
+        rep = sweep_workflow(name, config, n_instances,
+                             with_pareto=not args.smoke)
         results["workflows"][name] = rep
         results["pareto_points_total"] += len(rep["pareto"])
 
-        print(f"\n=== {name} ===")
+        print(f"\n=== {name} [{args.config}] ===")
         for objective, rows in rep["strategies"].items():
             print(f"  objective={objective}")
             for strat, r in rows.items():
-                print(f"    {strat:11s}: {r['makespan_ms']:8.1f} ms   "
+                print(f"    {strat:12s}: {r['makespan_ms']:8.1f} ms   "
                       f"${r['cost_usd_per_wf'] * 1e6:9.2f}/M")
             dom = rep["dominates_single_cloud"][objective]
             print(f"    planned beats {dom or 'no single cloud'} on {objective}")
-        print(f"  pareto frontier ({len(rep['pareto'])} points):")
-        for p in rep["pareto"]:
-            print(f"    λ={p['weight']:.2f}  sim {p['sim_makespan_ms']:8.1f} ms  "
-                  f"${p['sim_cost_usd_per_wf'] * 1e6:9.2f}/M")
+        if rep["pareto"]:
+            print(f"  pareto frontier ({len(rep['pareto'])} points):")
+            for p in rep["pareto"]:
+                print(f"    λ={p['weight']:.2f}  sim {p['sim_makespan_ms']:8.1f} ms  "
+                      f"${p['sim_cost_usd_per_wf'] * 1e6:9.2f}/M")
 
-    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
-    with open(args.out, "w") as f:
-        json.dump(results, f, indent=1, sort_keys=True)
-    print(f"\nwrote {args.out} ({results['pareto_points_total']} pareto points"
-          f" across {len(WORKFLOWS)} workflows)")
-    return 0
+    if not args.smoke:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1, sort_keys=True)
+        print(f"\nwrote {args.out} ({results['pareto_points_total']} pareto "
+              f"points across {len(WORKFLOWS)} workflows)")
+        return 0
+    return smoke_verdict(results)
 
 
 if __name__ == "__main__":

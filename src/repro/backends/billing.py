@@ -58,8 +58,9 @@ class Bill:
         self.counters["ds_reads"] += n
         return c
 
-    def charge_egress(self, src_cloud: str, nbytes: int) -> float:
-        c = (nbytes / 1e9) * cal.EGRESS_PRICE_PER_GB
+    def charge_egress(self, src_cloud: str, nbytes: int,
+                      price_per_gb: float = cal.EGRESS_PRICE_PER_GB) -> float:
+        c = (nbytes / 1e9) * price_per_gb
         self.egress_cost += c
         self.by_cloud[src_cloud] += c
         self.counters["egress_bytes"] += nbytes

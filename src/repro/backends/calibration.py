@@ -50,8 +50,9 @@ INVOKE_PRICE = 0.20e-6           # $ per request (Lambda list price)
 RETRY_BACKOFF_MS = 1000.0        # FaaS at-least-once retry backoff
 MAX_RETRIES = 2                  # async invoke retry budget (Lambda default)
 
-# Payload hard quotas for async invocation (paper §4.3.1)
-PAYLOAD_QUOTA = {"aws": 256 * 1024, "aliyun": 128 * 1024}
+# Payload hard quotas for async invocation (paper §4.3.1); gcp gets the
+# Cloud-Functions-class 256 KB quota in the extended testbed.
+PAYLOAD_QUOTA = {"aws": 256 * 1024, "aliyun": 128 * 1024, "gcp": 256 * 1024}
 DEFAULT_PAYLOAD_QUOTA = 128 * 1024
 
 # --------------------------------------------------------------------------
@@ -67,8 +68,10 @@ INTER_CLOUD_SAME_REGION_RTT_MS = 16.0
 # endpoints, not in-VPC APIs: extra per-call latency.
 PUBLIC_ENDPOINT_MS = 28.0
 INTER_CLOUD_CROSS_REGION_RTT_MS = 120.0  # e.g. ap-northeast-1 ↔ us-west-1
-EGRESS_PRICE_PER_GB = 0.09       # $/GB leaving a cloud
-BANDWIDTH_GBPS = 1.0             # per-flow cross-cloud throughput
+EGRESS_PRICE_PER_GB = 0.09       # $/GB leaving a cloud (per-cloud overrides
+                                 # via a config's ``egress_price_per_gb``)
+BANDWIDTH_GBPS = 1.0             # per-flow cross-cloud throughput, **Gbit/s**
+INTRA_CLOUD_BANDWIDTH_GBPS = 10.0  # same-cloud service links (VPC-class)
 
 # --------------------------------------------------------------------------
 # Compute flavors (GB·s pricing + relative speed)
@@ -104,6 +107,10 @@ CPU_ALIYUN = Flavor("ali_cpu", price_per_gb_s=1.63850e-5, speed=1.15)
 # between gpu8 (faster) and gpu4 (cheaper).
 GPU_ALIYUN_4G = Flavor("ali_gpu4", price_per_gb_s=0.9e-5, speed=7.0, gpu=True, memory_gb=4.0)
 GPU_ALIYUN_8G = Flavor("ali_gpu8", price_per_gb_s=1.25e-5, speed=15.0, gpu=True, memory_gb=8.0)
+# GCP Cloud-Functions-class CPU tier for the extended (≥3-cloud) testbed:
+# cheapest per GB·s but slightly slower per reference second — so the cost
+# objective genuinely considers it while makespan mostly does not.
+CPU_GCP = Flavor("gcp_cpu", price_per_gb_s=1.54e-5, speed=0.95)
 
 # --------------------------------------------------------------------------
 # Centralized-orchestrator baselines
@@ -154,3 +161,31 @@ def default_jointcloud() -> dict:
             ("aws", "aliyun"): INTER_CLOUD_SAME_REGION_RTT_MS,
         },
     }
+
+
+def extended_jointcloud() -> dict:
+    """A ≥3-cloud jointcloud: the paper's AWS+AliYun testbed plus a
+    cross-region GCP, with a measured RTT matrix, per-pair bandwidth and
+    per-cloud egress tariffs — the topology-general substrate the planner's
+    N-cloud path is validated on (``benchmarks/placement_sweep.py
+    --config extended``)."""
+    base = default_jointcloud()
+    base["clouds"]["gcp"] = {
+        "region": "us-west1",
+        "faas": {"functions": CPU_GCP},
+        "tables": ["firestore"],
+        "objects": ["gcs"],
+    }
+    base["rtt_ms"].update({
+        ("aws", "gcp"): 98.0,        # ap-northeast-1 ↔ us-west1
+        ("aliyun", "gcp"): 112.0,    # ap-north-1 ↔ us-west1
+    })
+    # trans-Pacific flows are thinner than the metro aws↔aliyun link
+    base["bandwidth_gbps"] = {
+        ("aws", "aliyun"): BANDWIDTH_GBPS,
+        ("aws", "gcp"): 0.6,
+        ("aliyun", "gcp"): 0.5,
+    }
+    # GCP bills egress noticeably higher at list price
+    base["egress_price_per_gb"] = {"gcp": 0.12}
+    return base

@@ -294,12 +294,16 @@ class SimCloud:
         self._seq = itertools.count()
         self.bill = Bill()
 
+        # Imported here, not at module top: repro.core's package init pulls
+        # in workflow.py, which imports this module — a top-level import of
+        # repro.core.costmodel would deadlock that cycle at first import.
+        from repro.core.costmodel import CostModel, Topology
+        self.topology = Topology.from_config(config)
+        self.cost = CostModel(self.topology)
+
         self.faas: Dict[str, FaaSSystem] = {}
         self.stores: Dict[str, DataStoreService] = {}
-        self.cloud_region: Dict[str, str] = {}
-        self._rtt: Dict[Tuple[str, str], float] = {}
         for cname, c in config["clouds"].items():
-            self.cloud_region[cname] = c.get("region", cname)
             for sysname, flavor in c.get("faas", {}).items():
                 fid = shim.faas_id(cname, sysname)
                 quota = cal.PAYLOAD_QUOTA.get(cname, cal.DEFAULT_PAYLOAD_QUOTA)
@@ -310,9 +314,6 @@ class SimCloud:
             for o in c.get("objects", []):
                 did = shim.ds_id(cname, o)
                 self.stores[did] = DataStoreService(did, cname, "object", TableState(did))
-        for (a, b), ms in config.get("rtt_ms", {}).items():
-            self._rtt[(a, b)] = ms
-            self._rtt[(b, a)] = ms
 
         self.deployments: Dict[Tuple[str, str], Deployment] = {}
         self.running: Dict[str, set] = {}
@@ -324,19 +325,13 @@ class SimCloud:
     # ---- topology helpers -----------------------------------------------------
 
     def rtt_ms(self, cloud_a: str, cloud_b: str) -> float:
-        if cloud_a == cloud_b:
-            return cal.INTRA_CLOUD_RTT_MS
-        base = self._rtt.get((cloud_a, cloud_b))
-        if base is None:
-            same_region = self.cloud_region.get(cloud_a) == self.cloud_region.get(cloud_b)
-            base = (cal.INTER_CLOUD_SAME_REGION_RTT_MS if same_region
-                    else cal.INTER_CLOUD_CROSS_REGION_RTT_MS)
-        return base
+        return self.cost.rtt_ms(cloud_a, cloud_b)
 
     def transfer_ms(self, cloud_a: str, cloud_b: str, nbytes: int) -> float:
-        """Latency of moving nbytes between clouds (RTT + bandwidth term)."""
-        bw_ms = (nbytes / (cal.BANDWIDTH_GBPS * 1e9)) * 1000.0 * 8 / 8
-        return self.rtt_ms(cloud_a, cloud_b) + bw_ms
+        """Latency of moving nbytes between clouds (RTT + wire time) — the
+        shared :class:`repro.core.costmodel.CostModel`, so the placement
+        planner predicts exactly what the interpreter charges."""
+        return self.cost.transfer_ms(cloud_a, cloud_b, nbytes)
 
     def _jit(self, ms: float) -> float:
         return ms * (1.0 + self.rng.random() * self.jitter)
@@ -472,9 +467,11 @@ class SimCloud:
                 return
             # control-plane accept + payload transfer; bill egress if cross-cloud
             if target.cloud != here:
-                self.bill.charge_egress(here, nbytes)
+                self.bill.charge_egress(here, nbytes,
+                                        self.cost.egress_price_per_gb(here))
             self.bill.charge_invoke(target.cloud)
-            accept = self._jit(cal.INVOKE_API_MS) + (nbytes / (cal.BANDWIDTH_GBPS * 1e9)) * 1000.0
+            accept = self._jit(cal.INVOKE_API_MS) + self.cost.wire_ms(
+                here, target.cloud, nbytes)
             self.after(accept, lambda: self._enqueue(effect.faas, effect.function,
                                                      effect.payload, attempt=0))
             self._hold(ex, accept + rtt / 2, lambda: ok(True))
@@ -498,12 +495,14 @@ class SimCloud:
                 nbytes = effect.size_bytes or estimate_size(effect.value)
                 created = st.create_if_absent(effect.key, effect.value)
                 move = nbytes if store.cloud != here else 0
-                return created, store.write_ms() + nbytes / (cal.BANDWIDTH_GBPS * 1e9) * 1000.0, 1, 0, move
+                wire = self.cost.wire_ms(here, store.cloud, nbytes)
+                return created, store.write_ms() + wire, 1, 0, move
             if isinstance(effect, shim.DsGet):
                 val = st.get(effect.key)
                 nbytes = estimate_size(val)
                 move = nbytes if store.cloud != here else 0
-                return val, store.read_ms() + nbytes / (cal.BANDWIDTH_GBPS * 1e9) * 1000.0, 0, 1, move
+                wire = self.cost.wire_ms(here, store.cloud, nbytes)
+                return val, store.read_ms() + wire, 0, 1, move
             if isinstance(effect, shim.DsAppendGetList):
                 val = st.append_and_get_list(effect.key, effect.items)
                 return val, store.write_ms() + store.read_ms(), 1, 1, 0
@@ -526,8 +525,9 @@ class SimCloud:
             if r:
                 self.bill.charge_ds_read(store.cloud, r)
             if moved:
-                self.bill.charge_egress(store.cloud if isinstance(effect, shim.DsGet) else here,
-                                        moved)
+                src = store.cloud if isinstance(effect, shim.DsGet) else here
+                self.bill.charge_egress(src, moved,
+                                        self.cost.egress_price_per_gb(src))
             if isinstance(result, BaseException):
                 self._hold(ex, self._jit(op_ms) + rtt / 2, lambda: err(result))
             else:

@@ -1,0 +1,367 @@
+"""Unified N-cloud topology & cost model — the single source of truth for
+how the repo reasons about the jointcloud substrate.
+
+Both consumers of inter-cloud latency/bandwidth/egress arithmetic live on
+top of this module:
+
+  * :mod:`repro.backends.simcloud` — the discrete-event interpreter charges
+    wire time and egress through :class:`CostModel`;
+  * :mod:`repro.core.placement` — the DAG planner evaluates candidate
+    assignments with the *same* :class:`CostModel`, so predicted makespans
+    are comparable to simulated timelines by construction.
+
+Paper-symbol mapping (Figs 11 & 16, §4.3, §5.3–5.4)
+---------------------------------------------------
+=====================  =====================================================
+Field / method          Paper quantity
+=====================  =====================================================
+``Topology.rtt_ms``     inter-cloud round-trip latency: the per-hop term of
+                        Fig 11's indirect-transfer cost (both datastore legs)
+                        and the cross-cloud invocation term of the ≈78 ms
+                        failover overhead (§5.3, Fig 10).
+``Topology.bandwidth``  per-flow cross-cloud throughput in **Gbit/s** — the
+                        slope of the payload-size term in Fig 11 (left);
+                        note the explicit ×8 byte→bit conversion in
+                        :meth:`CostModel.wire_ms`.
+``egress_price``        $/GB leaving a cloud — the "egress" bar of Fig 16's
+                        cost decomposition and the Fig 11 (right) minority
+                        penalty of the majority-rule datastore placement.
+``invoke_price``        per-request charge (Fig 16 "invocation").
+``table prices``        checkpoint W/R tariffs (§5.4, Fig 16 "datastore").
+``hop_overhead_ms``     queue dwell + control-plane accept + wrapper
+                        bookkeeping + the two §4.1 checkpoint writes that
+                        ride every hop (Fig 20's non-user phases).
+``fanout_stagger_ms``   §4.1.2 grouped invocation: fan-outs are issued in
+                        ``FANOUT_CHUNK``-sized waves, each wave paying one
+                        parallel-invoke + checkpoint-append round (Fig 8).
+=====================  =====================================================
+
+Unit discipline: ``BANDWIDTH`` values are **Gbit/s**; all ``*_ms`` values
+are milliseconds of virtual clock; every byte→ms conversion happens in
+:meth:`CostModel.wire_ms` (nowhere else), which multiplies by 8 to convert
+bytes to bits.  The pre-refactor code divided bytes by ``Gbit/s × 1e9``,
+silently treating Gbit/s as GByte/s — an 8× undercount of wire time.
+
+:class:`EdgeProfiles` closes the trace-feedback loop: it learns per-node
+output sizes, reference compute and Map widths from completed SimCloud
+executions, replacing the static ``out_bytes`` hints after a pilot run
+(GeoFF-style measured transfer profiles, arXiv 2405.13594).
+"""
+
+from __future__ import annotations
+
+import math
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Mapping, Optional, Tuple
+
+from repro.backends import calibration as cal
+from repro.backends import shim
+
+
+def _pair(a: str, b: str) -> Tuple[str, str]:
+    """Canonical unordered cloud pair (RTT/bandwidth are symmetric)."""
+    return (a, b) if a <= b else (b, a)
+
+
+# ==========================================================================
+# Topology — who is where, and what the wires between them look like
+# ==========================================================================
+
+
+@dataclass(frozen=True)
+class Topology:
+    """N-cloud substrate description: RTT matrix, per-pair bandwidth, tariffs.
+
+    Unknown pairs fall back by region: same region ⇒
+    ``INTER_CLOUD_SAME_REGION_RTT_MS``, different ⇒
+    ``INTER_CLOUD_CROSS_REGION_RTT_MS`` — so an N≥3 config only needs to
+    pin the pairs it has measured.
+    """
+
+    clouds: Tuple[str, ...]
+    regions: Mapping[str, str] = field(default_factory=dict)
+    rtt_table: Mapping[Tuple[str, str], float] = field(default_factory=dict)
+    bandwidth_table: Mapping[Tuple[str, str], float] = field(default_factory=dict)
+    egress_table: Mapping[str, float] = field(default_factory=dict)
+    intra_rtt_ms: float = cal.INTRA_CLOUD_RTT_MS
+    intra_bandwidth_gbps: float = cal.INTRA_CLOUD_BANDWIDTH_GBPS
+    default_bandwidth_gbps: float = cal.BANDWIDTH_GBPS
+    default_egress_price: float = cal.EGRESS_PRICE_PER_GB
+
+    @classmethod
+    def from_config(cls, config: Optional[dict] = None) -> "Topology":
+        """Build from a jointcloud config dict (``calibration.*_jointcloud``)."""
+        config = config or cal.default_jointcloud()
+        clouds = tuple(sorted(config["clouds"]))
+        regions = {c: v.get("region", c) for c, v in config["clouds"].items()}
+        rtt = {_pair(a, b): float(ms)
+               for (a, b), ms in config.get("rtt_ms", {}).items()}
+        bw = {_pair(a, b): float(g)
+              for (a, b), g in config.get("bandwidth_gbps", {}).items()}
+        egress = {c: float(p)
+                  for c, p in config.get("egress_price_per_gb", {}).items()}
+        return cls(clouds=clouds, regions=regions, rtt_table=rtt,
+                   bandwidth_table=bw, egress_table=egress)
+
+    # ---- lookups (symmetric, with N≥3 fallback rules) ---------------------
+
+    def rtt_ms(self, a: str, b: str) -> float:
+        if a == b:
+            return self.intra_rtt_ms
+        base = self.rtt_table.get(_pair(a, b))
+        if base is None:
+            base = (cal.INTER_CLOUD_SAME_REGION_RTT_MS
+                    if self.regions.get(a, a) == self.regions.get(b, b)
+                    else cal.INTER_CLOUD_CROSS_REGION_RTT_MS)
+        return base
+
+    def bandwidth_gbps(self, a: str, b: str) -> float:
+        if a == b:
+            return self.intra_bandwidth_gbps
+        return self.bandwidth_table.get(_pair(a, b), self.default_bandwidth_gbps)
+
+    def egress_price_per_gb(self, cloud: str) -> float:
+        return self.egress_table.get(cloud, self.default_egress_price)
+
+
+# ==========================================================================
+# CostModel — every byte→ms / byte→$ conversion, in one place
+# ==========================================================================
+
+
+class CostModel:
+    """Transfer latency, hop cost and stage cost over a :class:`Topology`.
+
+    ``rtt_override`` lets callers keep a custom RTT callable (the planner's
+    legacy ``rtt_fn`` hook) while still routing bandwidth/egress through the
+    shared model.
+    """
+
+    def __init__(self, topology: Optional[Topology] = None, *,
+                 rtt_override: Optional[Callable[[str, str], float]] = None):
+        self.topology = topology or Topology.from_config()
+        self._rtt_override = rtt_override
+
+    # ---- latency ----------------------------------------------------------
+
+    def rtt_ms(self, a: str, b: str) -> float:
+        if self._rtt_override is not None:
+            return self._rtt_override(a, b)
+        return self.topology.rtt_ms(a, b)
+
+    def wire_ms(self, a: str, b: str, nbytes: int) -> float:
+        """Serialization time of ``nbytes`` on the a↔b link.
+
+        The only byte→ms conversion in the codebase: bytes ×8 → bits,
+        divided by the link's Gbit/s.
+        """
+        if nbytes <= 0:
+            return 0.0
+        gbps = self.topology.bandwidth_gbps(a, b)
+        return (nbytes * 8 / (gbps * 1e9)) * 1000.0
+
+    def transfer_ms(self, a: str, b: str, nbytes: int) -> float:
+        """Latency of moving ``nbytes`` between clouds (RTT + wire time)."""
+        return self.rtt_ms(a, b) + self.wire_ms(a, b, nbytes)
+
+    # ---- money ------------------------------------------------------------
+
+    def egress_price_per_gb(self, cloud: str) -> float:
+        return self.topology.egress_price_per_gb(cloud)
+
+    def egress_usd(self, src: str, dst: str, nbytes: int) -> float:
+        """$ billed for ``nbytes`` leaving ``src`` toward ``dst`` (0 if
+        intra-cloud — the Fig 11 majority-rule saving)."""
+        if src == dst:
+            return 0.0
+        return (nbytes / 1e9) * self.egress_price_per_gb(src)
+
+    # ---- per-stage compute (Fig 1/2 heterogeneity) -------------------------
+
+    def stage_cost(self, flavor: cal.Flavor, compute_ms: float,
+                   fixed_ms: float = 0.0, memory_gb: Optional[float] = None,
+                   accel: bool = True) -> Tuple[float, float]:
+        return stage_cost(flavor, compute_ms, fixed_ms, memory_gb, accel)
+
+    # ---- per-hop overheads -------------------------------------------------
+
+    @property
+    def hop_overhead_ms(self) -> float:
+        """Placement-independent per-hop overhead: queue dwell +
+        control-plane accept + wrapper bookkeeping + two §4.1 checkpoint
+        writes (keeps planner estimates comparable to SimCloud)."""
+        return (cal.ASYNC_QUEUE_MS + cal.INVOKE_API_MS + cal.WRAPPER_CPU_MS
+                + 2 * cal.TABLE_WRITE_MS)
+
+    @property
+    def fanout_wave_ms(self) -> float:
+        """One §4.1.2 invocation wave: a parallel-invoke accept round plus
+        the grouped checkpoint append (write + read-back)."""
+        return cal.INVOKE_API_MS + cal.TABLE_WRITE_MS + cal.TABLE_READ_MS
+
+    @staticmethod
+    def invocation_waves(width: int) -> int:
+        """Number of ``FANOUT_CHUNK``-limited waves a fan-out of ``width``
+        instances is issued in (Fig 8 grouped checkpointing)."""
+        return max(1, math.ceil(max(width, 1) / cal.FANOUT_CHUNK))
+
+    def fanout_stagger_ms(self, width: int) -> float:
+        """Extra start delay of the *last* wave of a width-``width`` fan-out
+        relative to the first (0 for width ≤ FANOUT_CHUNK)."""
+        return (self.invocation_waves(width) - 1) * self.fanout_wave_ms
+
+
+def stage_cost(flavor: cal.Flavor, compute_ms: float, fixed_ms: float = 0.0,
+               memory_gb: Optional[float] = None,
+               accel: bool = True) -> Tuple[float, float]:
+    """(duration_ms, usd) of running a stage once on ``flavor`` (GB·s model).
+
+    ``accel=False`` marks compute a GPU cannot accelerate: on GPU flavors it
+    runs at CPU-reference speed (mirrors ``Workload.duration_ms``).
+    """
+    speed = 1.0 if (flavor.gpu and not accel) else flavor.speed
+    dur = compute_ms / max(speed, 1e-9) + fixed_ms
+    mem = memory_gb if memory_gb is not None else flavor.memory_gb
+    usd = mem * (dur / 1000.0) * flavor.price_per_gb_s + cal.INVOKE_PRICE
+    return dur, usd
+
+
+# ==========================================================================
+# EdgeProfiles — trace-calibrated workload models (the feedback loop)
+# ==========================================================================
+
+
+@dataclass
+class NodeProfile:
+    """What the traces say about one workflow function."""
+
+    name: str
+    out_bytes: int               # mean observed output wire size
+    compute_ms: float            # flavor-normalized reference compute
+    fixed_ms: float              # non-accelerable part (from the workload)
+    accel: bool
+    width: int = 1               # max observed Map instances per workflow
+    samples: int = 0
+
+    def as_dict(self) -> dict:
+        return {"name": self.name, "out_bytes": self.out_bytes,
+                "compute_ms": round(self.compute_ms, 3),
+                "fixed_ms": round(self.fixed_ms, 3), "accel": self.accel,
+                "width": self.width, "samples": self.samples}
+
+
+class EdgeProfiles:
+    """Per-node transfer/duration profiles learned from completed executions.
+
+    Feed the result to ``plan_workflow(profiles=...)``: learned ``out_bytes``
+    replace the spec's static hints, learned reference compute replaces the
+    declared durations, and learned Map widths populate ``instances`` — the
+    pilot-run → re-plan loop.
+    """
+
+    def __init__(self, nodes: Optional[Dict[str, NodeProfile]] = None):
+        self.nodes: Dict[str, NodeProfile] = dict(nodes or {})
+
+    # ---- learning ----------------------------------------------------------
+
+    @classmethod
+    def from_records(cls, sim: Any, *,
+                     workflow_prefix: Optional[str] = None) -> "EdgeProfiles":
+        """Learn profiles from a SimCloud's completed execution records.
+
+        Only ``done`` records count (crashed/retried attempts carry no
+        trustworthy output).  ``workflow_prefix`` restricts learning to one
+        workflow's instances (records of other workflows sharing the sim are
+        ignored).  Jitter means learned compute is a mildly inflated mean of
+        the reference duration — calibration noise the planner tolerates.
+        """
+        # Imported lazily: simcloud itself builds a CostModel from this
+        # module at runtime, so a top-level import would be circular.
+        from repro.backends.simcloud import estimate_size
+
+        sizes: Dict[str, list] = defaultdict(list)
+        computes: Dict[str, list] = defaultdict(list)
+        fixed: Dict[str, float] = {}
+        accel: Dict[str, bool] = {}
+        widths: Dict[str, Dict[str, set]] = defaultdict(lambda: defaultdict(set))
+        for r in sim.records:
+            if r.status != "done" or r.function.startswith("__"):
+                continue
+            dep = sim.deployments.get((r.faas, r.function))
+            faas = sim.faas.get(r.faas)
+            if dep is None or faas is None:
+                continue
+            wfid, instance = _instance_key(r.payload)
+            if wfid is None or (workflow_prefix is not None
+                                and not wfid.startswith(workflow_prefix)):
+                continue
+            w = dep.workload
+            acc = bool(getattr(w, "accel", True))
+            fix = float(getattr(w, "fixed_ms", 0.0) or 0.0)
+            speed = 1.0 if (faas.flavor.gpu and not acc) else faas.flavor.speed
+            user_ms = r.phase_breakdown().get("user_exec", 0.0)
+            sizes[r.function].append(estimate_size(r.result))
+            computes[r.function].append(max(0.0, user_ms - fix) * speed)
+            fixed[r.function] = fix
+            accel[r.function] = acc
+            widths[r.function][wfid].add(instance)
+        nodes: Dict[str, NodeProfile] = {}
+        for fn, ss in sizes.items():
+            width = max((len(v) for v in widths[fn].values()), default=1)
+            nodes[fn] = NodeProfile(
+                name=fn,
+                out_bytes=int(round(sum(ss) / len(ss))),
+                compute_ms=sum(computes[fn]) / len(computes[fn]),
+                fixed_ms=fixed[fn],
+                accel=accel[fn],
+                width=width,
+                samples=len(ss))
+        return cls(nodes)
+
+    # ---- planner-facing queries -------------------------------------------
+
+    def out_bytes(self, name: str) -> Optional[int]:
+        p = self.nodes.get(name)
+        return p.out_bytes if p is not None else None
+
+    def workload(self, name: str) -> Optional[Tuple[float, float, bool]]:
+        """(compute_ms, fixed_ms, accel) or None if the node was never traced."""
+        p = self.nodes.get(name)
+        return (p.compute_ms, p.fixed_ms, p.accel) if p is not None else None
+
+    def instances(self) -> Dict[str, int]:
+        """Learned Map widths (> 1 only) keyed by function name."""
+        return {n: p.width for n, p in self.nodes.items() if p.width > 1}
+
+    # ---- (de)serialization (persist a pilot run's calibration) -------------
+
+    def as_dict(self) -> dict:
+        return {n: p.as_dict() for n, p in sorted(self.nodes.items())}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Mapping[str, Any]]) -> "EdgeProfiles":
+        return cls({n: NodeProfile(
+            name=v.get("name", n), out_bytes=int(v["out_bytes"]),
+            compute_ms=float(v["compute_ms"]), fixed_ms=float(v["fixed_ms"]),
+            accel=bool(v["accel"]), width=int(v.get("width", 1)),
+            samples=int(v.get("samples", 0))) for n, v in d.items()})
+
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+
+def _instance_key(payload: Any) -> Tuple[Optional[str], Tuple]:
+    """(workflow_id, instance discriminator) from an execution payload.
+
+    Downstream hops carry a Control dict (branch stack distinguishes Map
+    instances); entry events carry ``workflow_id`` directly.
+    """
+    if not isinstance(payload, dict):
+        return None, ()
+    ctl = payload.get("Control")
+    if isinstance(ctl, dict):
+        return (ctl.get("workflowId"),
+                (tuple(ctl.get("branch", ())), ctl.get("iter", 0),
+                 ctl.get("step", 0)))
+    return payload.get("workflow_id"), ()

@@ -18,6 +18,11 @@ coordinate-descent refinement.  :func:`pareto_frontier` sweeps the
 makespan↔cost scalarization weight and returns the non-dominated plans.
 The resulting :class:`PlacementPlan` feeds ``subgraph.apply_placement`` /
 ``workflow.deploy(plan=...)``.
+
+All latency/egress arithmetic goes through the shared
+:class:`repro.core.costmodel.CostModel` — the same object SimCloud's effect
+interpreter charges with — so the planner's analytic estimates and the
+simulator's timelines come from one model, not two hand-synchronized copies.
 """
 
 from __future__ import annotations
@@ -28,6 +33,7 @@ from typing import Any, Callable, Dict, Iterable, List, Mapping, Optional, Seque
 
 from repro.backends import calibration as cal
 from repro.backends import shim
+from repro.core.costmodel import CostModel, EdgeProfiles, Topology, stage_cost
 
 
 def majority_cloud(clouds: Sequence[str]) -> Optional[str]:
@@ -56,21 +62,6 @@ def best_placement(group_clouds: Sequence[str]) -> Tuple[str, int]:
 # --------------------------------------------------------------------------
 
 
-def stage_cost(flavor: cal.Flavor, compute_ms: float, fixed_ms: float = 0.0,
-               memory_gb: Optional[float] = None,
-               accel: bool = True) -> Tuple[float, float]:
-    """(duration_ms, usd) of running a stage once on ``flavor`` (GB·s model).
-
-    ``accel=False`` marks compute a GPU cannot accelerate: on GPU flavors it
-    runs at CPU-reference speed (mirrors ``Workload.duration_ms``).
-    """
-    speed = 1.0 if (flavor.gpu and not accel) else flavor.speed
-    dur = compute_ms / max(speed, 1e-9) + fixed_ms
-    mem = memory_gb if memory_gb is not None else flavor.memory_gb
-    usd = mem * (dur / 1000.0) * flavor.price_per_gb_s + cal.INVOKE_PRICE
-    return dur, usd
-
-
 def choose_flavor(flavors: Dict[str, cal.Flavor], compute_ms: float,
                   fixed_ms: float = 0.0, objective: str = "makespan",
                   memory_gb: Optional[float] = None,
@@ -97,11 +88,10 @@ def choose_flavor(flavors: Dict[str, cal.Flavor], compute_ms: float,
 _GROUPED = {"Parallel", "Map", "FanIn"}
 _FANIN = "FanIn"
 
-# Placement-independent per-hop overhead (queue dwell + control-plane accept
-# + wrapper bookkeeping + the two §4.1 checkpoint writes).  Keeping it in the
-# estimate makes predicted makespans comparable to SimCloud timelines.
-HOP_OVERHEAD_MS = (cal.ASYNC_QUEUE_MS + cal.INVOKE_API_MS + cal.WRAPPER_CPU_MS
-                   + 2 * cal.TABLE_WRITE_MS)
+# Placement-independent per-hop overhead — defined by the shared CostModel
+# (queue dwell + control-plane accept + wrapper bookkeeping + the two §4.1
+# checkpoint writes); kept as a module constant for callers of the old name.
+HOP_OVERHEAD_MS = CostModel().hop_overhead_ms
 _DEFAULT_BYTES = 4096
 # Control metadata that rides every hop (JLObject wrapper, checkpoint
 # records, bitmap updates) — egress-billed when the hop crosses clouds.
@@ -120,27 +110,7 @@ def flavors_from_config(config: Optional[dict] = None) -> Dict[str, cal.Flavor]:
 
 def rtt_fn_from_config(config: Optional[dict] = None) -> Callable[[str, str], float]:
     """Cloud-pair RTT model matching ``SimCloud.rtt_ms`` (same config keys)."""
-    config = config or cal.default_jointcloud()
-    table: Dict[Tuple[str, str], float] = {}
-    for (a, b), ms in config.get("rtt_ms", {}).items():
-        table[(a, b)] = table[(b, a)] = ms
-    regions = {c: v.get("region", c) for c, v in config["clouds"].items()}
-
-    def rtt(a: str, b: str) -> float:
-        if a == b:
-            return cal.INTRA_CLOUD_RTT_MS
-        base = table.get((a, b))
-        if base is None:
-            base = (cal.INTER_CLOUD_SAME_REGION_RTT_MS
-                    if regions.get(a) == regions.get(b)
-                    else cal.INTER_CLOUD_CROSS_REGION_RTT_MS)
-        return base
-
-    return rtt
-
-
-def _transfer_ms(rtt_ms: float, nbytes: int) -> float:
-    return rtt_ms + (nbytes / (cal.BANDWIDTH_GBPS * 1e9)) * 1000.0
+    return Topology.from_config(config).rtt_ms
 
 
 @dataclass
@@ -161,6 +131,7 @@ class PlacementPlan:
     est_cost_usd: float
     weight: float = 1.0
     failover: Dict[str, Tuple[str, ...]] = field(default_factory=dict)
+    excluded_clouds: Tuple[str, ...] = ()
 
     def overrides(self) -> Dict[str, Dict[str, Any]]:
         """Per-node override dicts for ``subgraph.apply_placement``.
@@ -183,21 +154,29 @@ class PlacementPlan:
         return {"workflow": self.workflow, "objective": self.objective,
                 "weight": self.weight, "assignment": dict(self.assignment),
                 "failover": {k: list(v) for k, v in self.failover.items()},
+                "excluded_clouds": list(self.excluded_clouds),
                 "est_makespan_ms": round(self.est_makespan_ms, 3),
                 "est_cost_usd": self.est_cost_usd}
 
 
 class _Planner:
-    """Shared state for one planning problem (spec × flavors × rtt model)."""
+    """Shared state for one planning problem (spec × flavors × cost model)."""
 
     def __init__(self, spec, flavors: Optional[Dict[str, cal.Flavor]],
-                 rtt_fn: Optional[Callable[[str, str], float]],
+                 cost_model: Optional[CostModel],
                  instances: Optional[Mapping[str, int]],
-                 candidates: Optional[Mapping[str, Sequence[str]]]):
+                 candidates: Optional[Mapping[str, Sequence[str]]],
+                 profiles: Optional[EdgeProfiles] = None,
+                 excluded_clouds: Sequence[str] = ()):
         self.spec = spec
         self.flavors = dict(flavors or flavors_from_config())
-        self.rtt = rtt_fn or rtt_fn_from_config()
-        self.instances = dict(instances or {})
+        self.cost = cost_model or CostModel()
+        self.rtt = self.cost.rtt_ms
+        self.profiles = profiles
+        # learned Map widths seed instance counts; explicit hints win
+        self.instances = dict(profiles.instances() if profiles else {})
+        self.instances.update(instances or {})
+        self.excluded = frozenset(excluded_clouds)
         self.nodes = list(spec.functions)
         self.fwd = [e for e in spec.edges if not getattr(e, "back_edge", False)]
         self.in_edges: Dict[str, List] = {n: [] for n in self.nodes}
@@ -206,9 +185,17 @@ class _Planner:
             self.out_edges[e.src].append(e)
             self.in_edges[e.dst].append(e)
         self.order = self._topo_order()
-        self.candidates = {n: tuple(candidates[n]) if candidates and n in candidates
-                           else tuple(sorted(self.flavors))
-                           for n in self.nodes}
+        self.candidates = {}
+        for n in self.nodes:
+            cands = (tuple(candidates[n]) if candidates and n in candidates
+                     else tuple(sorted(self.flavors)))
+            if self.excluded:
+                kept = tuple(f for f in cands
+                             if shim.cloud_of(f) not in self.excluded)
+                # a node whose every candidate lives in an excluded cloud is
+                # pinned there (data residency) — it cannot move, keep it
+                cands = kept or cands
+            self.candidates[n] = cands
         # fan-out/fan-in groups whose indirect datastore follows the majority
         # rule: per group, (nodes voting on the ds cloud, co-placement
         # members, edges routed through the ds) — semantics mirror
@@ -260,13 +247,23 @@ class _Planner:
     # ---- per-node models --------------------------------------------------
 
     def _workload(self, n: str) -> Tuple[float, float, int, bool]:
-        """(compute_ms, fixed_ms, out_bytes, accel) duck-typed off the spec."""
+        """(compute_ms, fixed_ms, out_bytes, accel): trace-learned profiles
+        take precedence over the spec's static hints (the pilot-run loop)."""
         w = self.spec.functions[n].workload
         out_bytes = getattr(w, "out_bytes", None)
-        return (float(getattr(w, "compute_ms", 0.0) or 0.0),
-                float(getattr(w, "fixed_ms", 0.0) or 0.0),
+        compute = float(getattr(w, "compute_ms", 0.0) or 0.0)
+        fixed = float(getattr(w, "fixed_ms", 0.0) or 0.0)
+        accel = bool(getattr(w, "accel", True))
+        if self.profiles is not None:
+            learned = self.profiles.workload(n)
+            if learned is not None:
+                compute, fixed, accel = learned
+            lb = self.profiles.out_bytes(n)
+            if lb is not None:
+                out_bytes = lb
+        return (compute, fixed,
                 _DEFAULT_BYTES if out_bytes is None else int(out_bytes),
-                bool(getattr(w, "accel", True)))
+                accel)
 
     def node_cost(self, n: str, fid: str) -> Tuple[float, float]:
         """(duration_ms, exec+invoke usd) of one instance of ``n`` on ``fid``."""
@@ -278,12 +275,17 @@ class _Planner:
     def evaluate(self, assignment: Mapping[str, str]) -> Tuple[float, float]:
         """Predicted (makespan_ms, cost_usd) of ``assignment``.
 
-        Mirrors SimCloud's latency/billing structure: per-node flavor-scaled
-        duration + per-hop overhead; direct transfers pay src→dst RTT +
-        bandwidth; grouped (Parallel/Map/FanIn) transfers route through the
-        majority-rule datastore and pay both legs; egress is billed on every
-        cross-cloud leg.  Choice arms are all assumed taken (conservative);
-        back-edges are ignored (single-iteration view).
+        Mirrors SimCloud's latency/billing structure through the *same*
+        :class:`CostModel`: per-node flavor-scaled duration + per-hop
+        overhead; direct transfers pay src→dst RTT + wire time; grouped
+        (Parallel/Map/FanIn) transfers route through the majority-rule
+        datastore and pay both legs; egress is billed on every cross-cloud
+        leg.  Width-aware: a Map target of width *k* runs *k* parallel
+        instances whose invocations are issued in ``FANOUT_CHUNK``-limited
+        waves (the last wave starts ``fanout_stagger_ms`` late), pays *k*×
+        execution/checkpoint cost and *k*× datastore-read egress.  Choice
+        arms are all assumed taken (conservative); back-edges are ignored
+        (single-iteration view).
         """
         cloud = {n: shim.cloud_of(assignment[n]) for n in self.nodes}
         ds_cloud = {gi: majority_cloud([cloud[v] for v in voters])
@@ -301,29 +303,42 @@ class _Planner:
             for e in self.in_edges[n]:
                 p = e.src
                 nbytes = self._workload(p)[2] + _CTRL_BYTES
+                p_inst = max(1, self.instances.get(p, 1))
                 gi = self.group_of_edge.get((p, n))
                 if gi is None:          # direct async invoke, src → dst
-                    hop = _transfer_ms(self.rtt(cloud[p], cloud[n]), nbytes)
-                    if cloud[p] != cloud[n]:
-                        cost += (nbytes / 1e9) * cal.EGRESS_PRICE_PER_GB
+                    hop = self.cost.transfer_ms(cloud[p], cloud[n], nbytes)
+                    # parallel per-instance chains each move their own copy
+                    cost += (self.cost.egress_usd(cloud[p], cloud[n], nbytes)
+                             * max(p_inst, inst))
                 else:                   # via the group's majority datastore,
                     # plus the §4.1/§4.3 coordination the sim really pays:
                     # the src's bitmap/checkpoint update at the ds cloud and
-                    # the trigger invoke src → dst
+                    # the trigger invoke src → dst.  Parallel flows overlap
+                    # in time (per-flow bandwidth), so the hop pays one
+                    # transfer — but every instance's bytes are billed.
                     dsc = ds_cloud[gi]
-                    hop = (_transfer_ms(self.rtt(cloud[p], dsc), nbytes)
-                           + _transfer_ms(self.rtt(dsc, cloud[n]), nbytes)
+                    hop = (self.cost.transfer_ms(cloud[p], dsc, nbytes)
+                           + self.cost.transfer_ms(dsc, cloud[n], nbytes)
                            + self.rtt(cloud[p], dsc)
                            + self.rtt(cloud[p], cloud[n]))
-                    # the src's ds write is one shared upload per group
-                    # (SimCloud bills one DsCreate); each dst's read is its own
+                    # upload leg: each of the src's ``p_inst`` instances
+                    # writes its own output once per group (a width-k Map
+                    # feeding a FanIn uploads k outputs, a fan-out source
+                    # uploads one shared value)
                     if cloud[p] != dsc and (p, gi) not in uploaded:
                         uploaded.add((p, gi))
-                        cost += (nbytes / 1e9) * cal.EGRESS_PRICE_PER_GB
-                    if dsc != cloud[n]:
-                        cost += (nbytes / 1e9) * cal.EGRESS_PRICE_PER_GB
+                        cost += (self.cost.egress_usd(cloud[p], dsc, nbytes)
+                                 * p_inst)
+                    # read leg: every dst instance pulls every src-instance
+                    # output (fan-in: 1 agg × k peer outputs; fan-out: k
+                    # readers × 1 shared value)
+                    cost += (self.cost.egress_usd(dsc, cloud[n], nbytes)
+                             * p_inst * inst)
                 start = max(start, finish[p] + hop)
-            finish[n] = start + HOP_OVERHEAD_MS + dur
+            # wave-staggered fan-out: the critical (last) instance of a
+            # width-``inst`` Map starts after its wave's invoke round
+            finish[n] = (start + self.cost.fanout_stagger_ms(inst)
+                         + self.cost.hop_overhead_ms + dur)
             makespan = max(makespan, finish[n])
             # checkpoint traffic: ~2 writes + 2 reads per hop (§4.1)
             cost += 2 * (cal.TABLE_WRITE_PRICE + cal.TABLE_READ_PRICE) * inst
@@ -404,7 +419,9 @@ class _Planner:
                         best_f, best_s = f, s
                 assignment[n] = best_f
                 changed |= best_f != prev
-            assignment = self._coplace(assignment, score)
+            coplaced = self._coplace(dict(assignment), score)
+            changed |= coplaced != assignment   # co-placement moves must
+            assignment = coplaced               # trigger another DP sweep
             if not changed:
                 break
         return assignment
@@ -432,31 +449,78 @@ class _Planner:
                     base = best_s
         return assignment
 
-    def failover_map(self, assignment: Mapping[str, str]) -> Dict[str, Tuple[str, ...]]:
-        """Best same-role candidate in a *different* cloud, per node (§5.3)."""
+    def failover_map(self, assignment: Mapping[str, str],
+                     weight: float = 1.0) -> Dict[str, Tuple[str, ...]]:
+        """Ranked cross-cloud backups per node (§5.3, Fig 10).
+
+        The *first* backup comes from an outage-aware re-plan: for each home
+        cloud present in ``assignment``, the whole workflow is re-planned
+        with that cloud excluded, and every node homed there gets the
+        re-plan's choice — so when a cloud goes down, the failover targets
+        of all its nodes form one coherent backup placement rather than
+        per-node point fixes.  Remaining clouds follow, each represented by
+        its fastest same-role candidate.
+        """
+        homes = sorted({shim.cloud_of(f) for f in assignment.values()})
+        replans: Dict[str, Optional[Dict[str, str]]] = {}
+        for h in homes:
+            shadow = _Planner(self.spec, self.flavors, self.cost,
+                              self.instances, {n: c for n, c in
+                                               self.candidates.items()},
+                              self.profiles, excluded_clouds={h})
+            # only meaningful if some candidate survives outside ``h``
+            movable = any(shim.cloud_of(f) != h
+                          for n in self.nodes for f in shadow.candidates[n])
+            replans[h] = shadow.solve(weight) if movable else None
         out: Dict[str, Tuple[str, ...]] = {}
         for n in self.nodes:
             home = shim.cloud_of(assignment[n])
-            alts = [f for f in self.candidates[n] if shim.cloud_of(f) != home]
-            if alts:
-                best = min(alts, key=lambda f: self.node_cost(n, f)[0])
-                out[n] = (best,)
+            ranked: List[str] = []
+            used_clouds = {home}    # one backup per cloud: a second entry in
+            # an already-listed cloud would just burn a CreateClient+Invoke
+            # against the same outage before reaching a genuinely new cloud
+            rp = replans.get(home)
+            if rp and shim.cloud_of(rp[n]) != home:
+                ranked.append(rp[n])
+                used_clouds.add(shim.cloud_of(rp[n]))
+            by_cloud: Dict[str, Tuple[float, str]] = {}
+            for f in self.candidates[n]:
+                c = shim.cloud_of(f)
+                if c in used_clouds:
+                    continue
+                d = self.node_cost(n, f)[0]
+                if c not in by_cloud or (d, f) < by_cloud[c]:
+                    by_cloud[c] = (d, f)
+            ranked += [f for _, f in sorted(by_cloud.values())]
+            if ranked:
+                out[n] = tuple(ranked)
         return out
 
 
 def plan_workflow(spec, flavors: Optional[Dict[str, cal.Flavor]] = None, *,
                   objective: str = "makespan", weight: Optional[float] = None,
                   rtt_fn: Optional[Callable[[str, str], float]] = None,
+                  topology: Optional[Topology] = None,
+                  cost_model: Optional[CostModel] = None,
                   instances: Optional[Mapping[str, int]] = None,
+                  profiles: Optional[EdgeProfiles] = None,
                   candidates: Optional[Mapping[str, Sequence[str]]] = None,
+                  excluded_clouds: Sequence[str] = (),
                   with_failover: bool = False, sweeps: int = 3) -> PlacementPlan:
     """Jointly place every node of ``spec`` on the jointcloud.
 
     ``objective`` ∈ {"makespan", "cost"}; ``weight`` overrides it with an
     explicit scalarization λ ∈ [0, 1] (1 = pure makespan).  ``instances``
     scales per-node cost for dynamic (Map) fan-outs whose width is known;
-    ``candidates`` restricts per-node FaaS choices (e.g. data-residency).
-    ``with_failover`` additionally assigns each node a cross-cloud backup.
+    ``profiles`` (an :class:`~repro.core.costmodel.EdgeProfiles`) replaces
+    static ``out_bytes``/duration hints with trace-learned values and seeds
+    Map widths; ``candidates`` restricts per-node FaaS choices (e.g.
+    data-residency).  ``excluded_clouds`` removes entire clouds from the
+    search (outage-aware re-planning) — nodes pinned exclusively to an
+    excluded cloud keep their pin.  ``topology``/``cost_model`` select the
+    substrate model (``rtt_fn`` remains as a legacy RTT-only override).
+    ``with_failover`` additionally assigns each node a *ranked* cross-cloud
+    backup order derived from per-cloud outage re-plans.
     """
     if objective not in ("makespan", "cost"):
         raise ValueError(f"objective must be makespan|cost, got {objective!r}")
@@ -467,13 +531,17 @@ def plan_workflow(spec, flavors: Optional[Dict[str, cal.Flavor]] = None, *,
     else:
         # an explicit λ takes precedence; keep the recorded label consistent
         objective = "makespan" if weight >= 0.5 else "cost"
-    planner = _Planner(spec, flavors, rtt_fn, instances, candidates)
+    if cost_model is None:
+        cost_model = CostModel(topology, rtt_override=rtt_fn)
+    planner = _Planner(spec, flavors, cost_model, instances, candidates,
+                       profiles, excluded_clouds)
     assignment = planner.solve(weight, sweeps)
     mk, usd = planner.evaluate(assignment)
-    failover = planner.failover_map(assignment) if with_failover else {}
+    failover = planner.failover_map(assignment, weight) if with_failover else {}
     return PlacementPlan(workflow=spec.name, objective=objective,
                          assignment=assignment, est_makespan_ms=mk,
-                         est_cost_usd=usd, weight=weight, failover=failover)
+                         est_cost_usd=usd, weight=weight, failover=failover,
+                         excluded_clouds=tuple(sorted(excluded_clouds)))
 
 
 def pareto_frontier(spec, flavors: Optional[Dict[str, cal.Flavor]] = None, *,

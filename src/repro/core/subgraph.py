@@ -281,10 +281,16 @@ def apply_placement(spec: WorkflowSpec,
     out.entry = spec.entry
     for name, f in spec.functions.items():
         ov = overrides.get(name, {})
+        faas = ov.get("faas", f.faas)
+        # failover is an *order* (ranked backups, §4.2): preserve ranking,
+        # drop duplicates and the primary itself (a re-planned primary may
+        # coincide with a previously-listed backup)
+        failover = tuple(dict.fromkeys(
+            b for b in ov.get("failover", f.failover) if b != faas))
         out.functions[name] = FunctionSpec(
             name=name,
-            faas=ov.get("faas", f.faas),
-            failover=tuple(ov.get("failover", f.failover)),
+            faas=faas,
+            failover=failover,
             memory_gb=ov["memory_gb"] if "memory_gb" in ov else f.memory_gb,
             output_store_kind=f.output_store_kind,
             workload=f.workload)

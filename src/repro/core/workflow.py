@@ -89,6 +89,45 @@ class DeployedWorkflow:
                 if r.function == function and r.status == "done"]
         return done[-1].result if done else None
 
+    # ---- runtime re-planning (outage-aware, trace-calibrated) --------------
+
+    def learn_profiles(self):
+        """Trace-calibrated workload profiles from this sim's completed
+        executions (``EdgeProfiles.from_records``) — the pilot-run feedback
+        the planner consumes via ``plan_workflow(profiles=...)``."""
+        from repro.core.costmodel import EdgeProfiles
+        return EdgeProfiles.from_records(self.sim)
+
+    def replan(self, *, excluded_clouds: Any = (), objective: str = "makespan",
+               weight: Any = None, flavors: Any = None, profiles: Any = None,
+               candidates: Any = None) -> "DeployedWorkflow":
+        """Re-place this workflow for *future* instances and redeploy.
+
+        The outage path (§4.2/Fig 10): when a monitor observes a cloud
+        outage it calls ``replan(excluded_clouds={cloud})`` — the planner
+        solves the placement problem over the surviving clouds (seeded with
+        profiles learned from the traces so far) and the new assignment,
+        with ranked failover orders, replaces the deployments in place.
+        In-flight instances are unaffected: checkpoint keys are
+        attempt-location-independent, so they complete under either
+        placement.  Returns the re-deployed workflow (same sim).
+        """
+        from repro.core import placement
+        if profiles is None:
+            profiles = self.learn_profiles()
+        if flavors is None:
+            # candidates must mirror the sim's *actual* substrate — the
+            # global default config may lack clouds this jointcloud has
+            # (and the excluded-cloud filter would then fall back to pins
+            # on the very cloud being excluded)
+            flavors = {fid: f.flavor for fid, f in self.sim.faas.items()}
+        plan = placement.plan_workflow(
+            self.spec, flavors, objective=objective, weight=weight,
+            profiles=profiles, candidates=candidates,
+            excluded_clouds=tuple(excluded_clouds),
+            topology=self.sim.topology, with_failover=True)
+        return deploy(self.sim, self.spec, plan=plan)
+
 
 def deploy(sim: SimCloud, spec: sg.WorkflowSpec,
            catalog: Optional[sg.Catalog] = None, *,

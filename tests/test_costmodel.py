@@ -1,0 +1,177 @@
+"""Unified topology/cost layer: symmetry, N≥3 fallbacks, unit discipline,
+SimCloud↔planner agreement, and the EdgeProfiles trace-feedback loop."""
+
+import itertools
+
+import pytest
+
+from repro.backends import calibration as cal
+from repro.backends.simcloud import Blob, SimCloud, Workload
+from repro.core import subgraph as sg
+from repro.core import workflow as wf
+from repro.core.costmodel import CostModel, EdgeProfiles, Topology
+
+AWS = "aws/lambda"
+ALI = "aliyun/fc"
+
+
+# ---- Topology ---------------------------------------------------------------
+
+
+def test_topology_symmetry_extended():
+    t = Topology.from_config(cal.extended_jointcloud())
+    assert set(t.clouds) == {"aws", "aliyun", "gcp"}
+    for a, b in itertools.combinations(t.clouds, 2):
+        assert t.rtt_ms(a, b) == t.rtt_ms(b, a) > 0
+        assert t.bandwidth_gbps(a, b) == t.bandwidth_gbps(b, a) > 0
+    for c in t.clouds:
+        assert t.rtt_ms(c, c) == cal.INTRA_CLOUD_RTT_MS
+
+
+def test_topology_fallback_rules_n3():
+    """Pairs absent from the RTT table fall back by region (N≥3 configs only
+    pin measured pairs)."""
+    config = {
+        "clouds": {
+            "a": {"region": "r1"},
+            "b": {"region": "r1"},
+            "c": {"region": "r2"},
+        },
+        "rtt_ms": {("a", "c"): 75.0},
+    }
+    t = Topology.from_config(config)
+    assert t.rtt_ms("a", "c") == 75.0                 # pinned
+    assert t.rtt_ms("a", "b") == cal.INTER_CLOUD_SAME_REGION_RTT_MS
+    assert t.rtt_ms("b", "c") == cal.INTER_CLOUD_CROSS_REGION_RTT_MS
+    # bandwidth falls back to the global default
+    assert t.bandwidth_gbps("a", "b") == cal.BANDWIDTH_GBPS
+
+
+def test_topology_per_cloud_egress_tariffs():
+    t = Topology.from_config(cal.extended_jointcloud())
+    assert t.egress_price_per_gb("gcp") == 0.12
+    assert t.egress_price_per_gb("aws") == cal.EGRESS_PRICE_PER_GB
+
+
+# ---- CostModel unit discipline ---------------------------------------------
+
+
+def test_wire_ms_converts_bytes_to_bits():
+    """The bandwidth unit bug: Gbit/s must divide *bits*, not bytes (×8)."""
+    cm = CostModel(Topology.from_config())
+    nbytes = 1_000_000
+    expected = (nbytes * 8 / (cal.BANDWIDTH_GBPS * 1e9)) * 1000.0
+    assert cm.wire_ms("aws", "aliyun", nbytes) == pytest.approx(expected)
+    assert cm.wire_ms("aws", "aliyun", nbytes) == pytest.approx(8.0)
+    assert cm.transfer_ms("aws", "aliyun", nbytes) == pytest.approx(
+        cm.rtt_ms("aws", "aliyun") + expected)
+    assert cm.wire_ms("aws", "aliyun", 0) == 0.0
+
+
+def test_intra_cloud_wire_uses_vpc_bandwidth():
+    cm = CostModel()
+    assert cm.wire_ms("aws", "aws", 1_000_000) == pytest.approx(
+        8.0 / cal.INTRA_CLOUD_BANDWIDTH_GBPS)
+
+
+def test_egress_usd_free_intra_cloud():
+    cm = CostModel(Topology.from_config(cal.extended_jointcloud()))
+    assert cm.egress_usd("aws", "aws", 10**9) == 0.0
+    assert cm.egress_usd("aws", "gcp", 10**9) == pytest.approx(
+        cal.EGRESS_PRICE_PER_GB)
+    assert cm.egress_usd("gcp", "aws", 10**9) == pytest.approx(0.12)
+
+
+def test_fanout_waves_and_stagger():
+    cm = CostModel()
+    assert cm.invocation_waves(1) == 1
+    assert cm.invocation_waves(cal.FANOUT_CHUNK) == 1
+    assert cm.invocation_waves(cal.FANOUT_CHUNK + 1) == 2
+    assert cm.invocation_waves(25) == 3
+    assert cm.fanout_stagger_ms(cal.FANOUT_CHUNK) == 0.0
+    assert cm.fanout_stagger_ms(25) == pytest.approx(2 * cm.fanout_wave_ms)
+
+
+# ---- SimCloud ↔ planner agreement ------------------------------------------
+
+
+@pytest.mark.parametrize("config_fn", [cal.default_jointcloud,
+                                       cal.extended_jointcloud])
+def test_simcloud_and_planner_share_one_hop_model(config_fn):
+    """Both sides of the old duplication must now agree bit-for-bit: the
+    interpreter's transfer_ms is literally the planner-facing CostModel."""
+    config = config_fn()
+    sim = SimCloud(config)
+    cm = CostModel(Topology.from_config(config))
+    clouds = list(config["clouds"])
+    for a in clouds:
+        for b in clouds:
+            for nbytes in (0, 512, 40_000, 3_500_000):
+                assert sim.transfer_ms(a, b, nbytes) == pytest.approx(
+                    cm.transfer_ms(a, b, nbytes))
+            assert sim.rtt_ms(a, b) == pytest.approx(cm.rtt_ms(a, b))
+
+
+def test_simcloud_rtt_override_matrix():
+    sim = SimCloud(cal.extended_jointcloud())
+    assert sim.rtt_ms("aws", "gcp") == 98.0
+    assert sim.rtt_ms("gcp", "aliyun") == 112.0
+    assert sim.rtt_ms("aws", "aliyun") == cal.INTER_CLOUD_SAME_REGION_RTT_MS
+
+
+# ---- EdgeProfiles ----------------------------------------------------------
+
+
+def _map_spec(width: int) -> sg.WorkflowSpec:
+    spec = sg.WorkflowSpec("prof", gc=False)
+    spec.function("src", AWS, workload=Workload(
+        compute_ms=40, accel=False, out_bytes=64,     # deliberately wrong hint
+        fn=lambda x, k=width: [Blob(200_000, "part")] * k))
+    spec.function("work", ALI, workload=Workload(
+        compute_ms=120, accel=False, out_bytes=8, fn=lambda x: 0.5))
+    spec.function("agg", AWS, workload=Workload(
+        compute_ms=30, accel=False, out_bytes=8,
+        fn=lambda xs: sum(xs)))
+    spec.map("src", "work")
+    spec.fanin(["work"], "agg")
+    return spec
+
+
+def _pilot(width: int = 4, n: int = 3):
+    sim = SimCloud(seed=3)
+    dep = wf.deploy(sim, _map_spec(width))
+    ids = [dep.start(0, t=i * 5000.0) for i in range(n)]
+    sim.run()
+    for w in ids:
+        assert dep.result_of(w, "agg") is not None
+    return sim, dep
+
+
+def test_edge_profiles_from_records_learns_bytes_and_width():
+    sim, _ = _pilot(width=4)
+    prof = EdgeProfiles.from_records(sim)
+    assert set(prof.nodes) == {"src", "work", "agg"}
+    # learned output size reflects the real 4×200 KB list, not the 64 B hint
+    assert prof.out_bytes("src") > 4 * 200_000 * 0.9
+    assert prof.instances() == {"work": 4}
+    # learned reference compute tracks the declared model (jitter ≤ 12%)
+    compute, fixed, accel = prof.workload("work")
+    assert compute == pytest.approx(120.0, rel=0.15)
+    assert fixed == 0.0 and accel is False
+    assert prof.nodes["work"].samples == 3 * 4
+
+
+def test_edge_profiles_roundtrip():
+    sim, _ = _pilot(width=2, n=2)
+    prof = EdgeProfiles.from_records(sim)
+    d = prof.as_dict()
+    back = EdgeProfiles.from_dict(d)
+    assert back.as_dict() == d
+    assert len(back) == len(prof)
+    assert back.instances() == prof.instances()
+
+
+def test_edge_profiles_ignores_other_workflows():
+    sim, dep = _pilot(width=2, n=2)
+    prof = EdgeProfiles.from_records(sim, workflow_prefix="does-not-exist")
+    assert len(prof) == 0

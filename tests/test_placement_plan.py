@@ -3,9 +3,11 @@
 import pytest
 
 from repro.backends import calibration as cal
+from repro.backends import shim
 from repro.backends.simcloud import Blob, SimCloud, Workload
 from repro.core import subgraph as sg
 from repro.core import workflow as wf
+from repro.core.costmodel import CostModel, EdgeProfiles, Topology
 from repro.core.placement import (PlacementPlan, choose_flavor,
                                   flavors_from_config, pareto_frontier,
                                   plan_workflow, stage_cost)
@@ -134,10 +136,204 @@ def test_planned_beats_single_cloud_on_simcloud():
 
 def test_plan_failover_is_cross_cloud():
     plan = plan_workflow(qa_spec(), objective="makespan", with_failover=True)
-    from repro.backends import shim
     for n, faas in plan.assignment.items():
         for b in plan.failover.get(n, ()):
             assert shim.cloud_of(b) != shim.cloud_of(faas)
+
+
+def test_plan_failover_is_ranked_across_clouds():
+    """On the ≥3-cloud topology every node gets a *ranked* backup order:
+    one entry per surviving cloud, none in the home cloud, no duplicates."""
+    config = cal.extended_jointcloud()
+    plan = plan_workflow(qa_spec(), flavors_from_config(config),
+                         objective="makespan",
+                         topology=Topology.from_config(config),
+                         with_failover=True)
+    for n, faas in plan.assignment.items():
+        home = shim.cloud_of(faas)
+        backups = plan.failover[n]
+        clouds = [shim.cloud_of(b) for b in backups]
+        assert home not in clouds
+        assert len(set(clouds)) == len(clouds) == 2   # both other clouds
+
+
+# ---- outage-aware re-planning ----------------------------------------------
+
+
+def test_excluded_clouds_keeps_plan_off_dead_cloud():
+    config = cal.extended_jointcloud()
+    plan = plan_workflow(qa_spec(), flavors_from_config(config),
+                         objective="makespan",
+                         topology=Topology.from_config(config),
+                         excluded_clouds=("aliyun",))
+    assert plan.excluded_clouds == ("aliyun",)
+    for faas in plan.assignment.values():
+        assert shim.cloud_of(faas) != "aliyun"
+    # without the GPU cloud the BERT stage cannot be accelerated
+    assert plan.assignment["qa"] in (AWS, "gcp/functions")
+
+
+def test_excluded_clouds_respects_hard_pins():
+    """A node whose every candidate lives in the excluded cloud is pinned by
+    data residency — it stays put rather than crashing the planner."""
+    plan = plan_workflow(qa_spec(), objective="makespan",
+                         candidates={"sort": (AWS,)},
+                         excluded_clouds=("aws",))
+    assert plan.assignment["sort"] == AWS
+    assert shim.cloud_of(plan.assignment["qa"]) != "aws"
+
+
+def test_plan_failover_one_backup_per_cloud():
+    """A cost-weighted re-plan pick and the fastest same-cloud flavor must
+    not both appear: two backups in one cloud just burn a client-create +
+    doomed invoke against the same outage."""
+    spec = sg.WorkflowSpec("mono", gc=False)
+    spec.function("src", AWS, workload=Workload(
+        compute_ms=50, accel=False, out_bytes=50_000_000,
+        fn=lambda x: Blob(50_000_000)))
+    spec.function("work", ALI, workload=Workload(
+        compute_ms=800, out_bytes=8, fn=lambda x: 1))
+    spec.sequence("src", "work")
+    plan = plan_workflow(spec, objective="cost", with_failover=True,
+                         candidates={"src": (AWS,),
+                                     "work": (AWS, GPU4, GPU8)})
+    for n, backups in plan.failover.items():
+        clouds = [shim.cloud_of(b) for b in backups]
+        assert len(set(clouds)) == len(clouds)
+        assert shim.cloud_of(plan.assignment[n]) not in clouds
+
+
+def test_replan_uses_sim_substrate_not_default_config():
+    """replan() must draw candidates from the sim's actual jointcloud: on
+    the 3-cloud substrate, excluding two clouds must land on the third —
+    not silently fall back to a dead-cloud pin."""
+    spec = qa_spec()
+    sim = SimCloud(cal.extended_jointcloud(), seed=4)
+    dep = wf.deploy(sim, spec)
+    w0 = dep.start(0, workflow_id="pilot-ext-000")
+    sim.run()
+    assert dep.result_of(w0, "qa") == "42"
+    dep2 = dep.replan(excluded_clouds=("aliyun", "aws"))
+    assert {shim.cloud_of(v.faas) for v in dep2.views.values()} == {"gcp"}
+    w1 = dep2.start(0, workflow_id="replanned-ext-000", t=sim.now + 1.0)
+    sim.run()
+    assert dep2.result_of(w1, "qa") == "42"
+
+
+def test_deployed_workflow_replan_avoids_excluded_cloud():
+    spec = qa_spec()
+    sim = SimCloud(seed=2)
+    dep = wf.deploy(sim, spec, plan=plan_workflow(spec, objective="makespan"))
+    w0 = dep.start(0, workflow_id="pilot-000")
+    sim.run()
+    assert dep.result_of(w0, "qa") == "42"
+    assert shim.cloud_of(dep.views["qa"].faas) == "aliyun"   # GPU placement
+
+    dep2 = dep.replan(excluded_clouds=("aliyun",))
+    assert all(shim.cloud_of(v.faas) != "aliyun" for v in dep2.views.values())
+    sim.schedule_outage("aliyun", sim.now, sim.now + 1e9)
+    w1 = dep2.start(0, workflow_id="replanned-000", t=sim.now + 1.0)
+    sim.run()
+    assert dep2.result_of(w1, "qa") == "42"
+
+
+# ---- trace-calibrated profiles ---------------------------------------------
+
+
+def misleading_spec():
+    """Pinned AWS source whose static hint (64 B) wildly understates its real
+    5 MB output; the worker is marginally cheaper on AliYun."""
+    spec = sg.WorkflowSpec("mislead", gc=False)
+    spec.function("src", AWS, workload=Workload(
+        compute_ms=50, accel=False, out_bytes=64,
+        fn=lambda x: Blob(5_000_000, "big")))
+    spec.function("work", ALI, workload=Workload(
+        compute_ms=500, accel=False, out_bytes=8, fn=lambda x: 1))
+    spec.sequence("src", "work")
+    return spec
+
+
+def test_profiles_override_static_hints_and_flip_placement():
+    spec = misleading_spec()
+    naive = plan_workflow(spec, objective="cost", candidates={"src": (AWS,)})
+    # the 64 B hint makes the marginally cheaper remote flavor look free
+    assert shim.cloud_of(naive.assignment["work"]) == "aliyun"
+
+    sim = SimCloud(seed=5)
+    dep = wf.deploy(sim, spec)
+    for i in range(3):
+        dep.start(0, t=i * 4000.0)
+    sim.run()
+    profiles = dep.learn_profiles()
+    assert profiles.out_bytes("src") == pytest.approx(5_000_000, rel=0.01)
+
+    calibrated = plan_workflow(spec, objective="cost",
+                               candidates={"src": (AWS,)}, profiles=profiles)
+    # measured 5 MB egress dwarfs the flavor saving: co-place with the source
+    assert shim.cloud_of(calibrated.assignment["work"]) == "aws"
+    assert calibrated.est_cost_usd > naive.est_cost_usd  # honest bigger bill
+
+
+# ---- width-aware critical paths --------------------------------------------
+
+
+def test_map_width_staggers_critical_path():
+    """A Map fan-out wider than FANOUT_CHUNK is invoked in waves: the
+    planner's makespan must grow by the wave stagger, and per-instance
+    costs must scale with the width."""
+    def mc(width):
+        spec = sg.WorkflowSpec("mc", gc=False)
+        spec.function("m", AWS, workload=Workload(
+            compute_ms=40, accel=False, out_bytes=80_000,
+            fn=lambda x, k=width: [Blob(80_000)] * k))
+        spec.function("p", AWS, workload=Workload(
+            compute_ms=120, accel=False, out_bytes=8, fn=lambda x: 0.5))
+        spec.fanin(["p"], "a")
+        spec.function("a", AWS, workload=Workload(
+            compute_ms=30, accel=False, out_bytes=8, fn=lambda xs: sum(xs)))
+        spec.map("m", "p")
+        return spec
+
+    cm = CostModel()
+    narrow = plan_workflow(mc(5), objective="makespan", instances={"p": 5})
+    wide = plan_workflow(mc(25), objective="makespan", instances={"p": 25})
+    assert wide.est_makespan_ms >= (narrow.est_makespan_ms
+                                    + 2 * cm.fanout_wave_ms - 1e-6)
+    assert wide.est_cost_usd > narrow.est_cost_usd * 3
+
+
+def test_wide_map_egress_billed_per_instance():
+    """A width-k Map whose instances produce big cross-cloud outputs must be
+    *priced* at k uploads + k aggregator reads — the planner's estimate has
+    to track the simulator's bill, and the cost objective must co-place the
+    map with its source rather than chase a marginally cheaper flavor."""
+    def wide_spec():
+        spec = sg.WorkflowSpec("wide", gc=False)
+        spec.function("src", AWS, workload=Workload(
+            compute_ms=40, accel=False, out_bytes=80_000,
+            fn=lambda x: [Blob(80_000)] * 8))
+        spec.function("work", ALI, workload=Workload(
+            compute_ms=120, accel=False, out_bytes=1_000_000,
+            fn=lambda x: Blob(1_000_000)))
+        spec.function("agg", AWS, workload=Workload(
+            compute_ms=30, accel=False, out_bytes=8, fn=lambda xs: len(xs)))
+        spec.map("src", "work")
+        spec.fanin(["work"], "agg")
+        return spec
+
+    spec = wide_spec()
+    pinned_all = {"src": (AWS,), "work": (ALI,), "agg": (AWS,)}
+    plan = plan_workflow(spec, objective="cost", instances={"work": 8},
+                         candidates=pinned_all)
+    sim = SimCloud(seed=0)
+    dep = wf.deploy(sim, spec, plan=plan)
+    dep.start(0)
+    sim.run()
+    assert sim.bill.total == pytest.approx(plan.est_cost_usd, rel=0.35)
+
+    free = plan_workflow(spec, objective="cost", instances={"work": 8},
+                         candidates={"src": (AWS,)})
+    assert shim.cloud_of(free.assignment["work"]) == "aws"
 
 
 # ---- pareto -----------------------------------------------------------------
