@@ -1,8 +1,12 @@
 #!/usr/bin/env bash
 # Tier-1 verification (mirrors .github/workflows/ci.yml):
-#     ./ci.sh            run the full suite
-#     ./ci.sh -k kernel  any extra args are passed to pytest
+#     ./ci.sh            run the full suite + the throughput-sweep smoke gate
+#     ./ci.sh -k kernel  any extra args are passed to pytest (skips the gate)
 set -euo pipefail
 cd "$(dirname "$0")"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+python -m pytest -x -q "$@"
+if [ "$#" -eq 0 ]; then
+    # load-regression gate: bounded wall-clock, zero drops at sub-capacity load
+    python benchmarks/throughput_sweep.py --smoke
+fi

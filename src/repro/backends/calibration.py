@@ -72,6 +72,13 @@ EGRESS_PRICE_PER_GB = 0.09       # $/GB leaving a cloud (per-cloud overrides
                                  # via a config's ``egress_price_per_gb``)
 BANDWIDTH_GBPS = 1.0             # per-flow cross-cloud throughput, **Gbit/s**
 INTRA_CLOUD_BANDWIDTH_GBPS = 10.0  # same-cloud service links (VPC-class)
+# Contended-testbed knobs (throughput benchmark / load studies).  Per-flow
+# WAN throughput is far below the metro-link figure once traffic leaves a
+# provider's backbone: ~100 Mbit/s per TCP flow is a typical public-internet
+# cross-cloud rate.  The *aggregate* per-pair capacity bounds how many such
+# flows run at full rate before fair-share kicks in (capacity / per-flow).
+CONTENDED_FLOW_GBPS = 0.1        # per-flow rate under the contended testbed
+LINK_CAPACITY_GBPS = 0.4         # aggregate aws↔aliyun pipe (4 full-rate flows)
 
 # --------------------------------------------------------------------------
 # Compute flavors (GB·s pricing + relative speed)
@@ -161,6 +168,19 @@ def default_jointcloud() -> dict:
             ("aws", "aliyun"): INTER_CLOUD_SAME_REGION_RTT_MS,
         },
     }
+
+
+def contended_jointcloud(per_flow_gbps: float = CONTENDED_FLOW_GBPS,
+                         capacity_gbps: float = LINK_CAPACITY_GBPS) -> dict:
+    """The two-cloud testbed under realistic WAN contention: per-flow
+    cross-cloud throughput drops to public-internet rates and the aws↔aliyun
+    pair gets an aggregate capacity, so concurrent transfers beyond
+    ``capacity_gbps / per_flow_gbps`` flows fair-share the pipe (the
+    substrate of ``benchmarks/throughput_sweep.py``)."""
+    base = default_jointcloud()
+    base["bandwidth_gbps"] = {("aws", "aliyun"): per_flow_gbps}
+    base["link_capacity_gbps"] = {("aws", "aliyun"): capacity_gbps}
+    return base
 
 
 def extended_jointcloud() -> dict:

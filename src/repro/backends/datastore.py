@@ -16,19 +16,53 @@ enforced here:
 from __future__ import annotations
 
 import copy
+from bisect import bisect_left, insort
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Sequence
+
+# Isolation copies (puts/gets copy the value so callers can't alias store
+# state).  ``copy.deepcopy`` is the semantic model but far too slow for the
+# simulator's hot path; this copier returns immutable values (including
+# frozen dataclasses such as SimCloud's Blob) by reference and only
+# recursively copies mutable containers.  Anything exotic falls back to
+# deepcopy.
+_IMMUTABLE = (str, int, float, bool, bytes, type(None), frozenset)
+
+
+def _copy_value(v: Any) -> Any:
+    cls = v.__class__
+    if cls in _IMMUTABLE:
+        return v
+    if cls is list:
+        return [_copy_value(x) for x in v]
+    if cls is dict:
+        return {k: _copy_value(x) for k, x in v.items()}
+    if cls is tuple:
+        return tuple(_copy_value(x) for x in v)
+    params = getattr(cls, "__dataclass_params__", None)
+    if params is not None and params.frozen:
+        return v
+    return copy.deepcopy(v)
 
 
 @dataclass
 class TableState:
-    """One table/object-store namespace inside one cloud."""
+    """One table/object-store namespace inside one cloud.
+
+    A sorted key index rides along with ``items`` so ``list_prefix`` (the GC
+    sweep) is a bisect + contiguous slice instead of an all-keys scan —
+    mutate keys only through the primitives below, never via ``items``
+    directly, or the index desyncs.
+    """
 
     name: str
     items: Dict[str, Any] = field(default_factory=dict)
     # op counters for billing / Fig-20 style breakdowns
     writes: int = 0
     reads: int = 0
+
+    def __post_init__(self):
+        self._sorted_keys: List[str] = sorted(self.items)
 
     # -- Table 2 primitives -------------------------------------------------
 
@@ -37,14 +71,15 @@ class TableState:
         self.writes += 1
         if key in self.items:
             return False
-        self.items[key] = copy.deepcopy(value)
+        self.items[key] = _copy_value(value)
+        insort(self._sorted_keys, key)
         return True
 
     def get(self, key: str) -> Any:
-        """Strongly-consistent read (returns a deep copy; None if absent)."""
+        """Strongly-consistent read (returns an isolated copy; None if absent)."""
         self.reads += 1
         val = self.items.get(key)
-        return copy.deepcopy(val)
+        return _copy_value(val)
 
     def append_and_get_list(self, key: str, items: Sequence[Any]) -> List[Any]:
         """Atomically append ``items`` to the list at ``key`` and return it.
@@ -53,11 +88,15 @@ class TableState:
         Fig 8 being safe even if the create was lost to a crash).
         """
         self.writes += 1
-        cur = self.items.setdefault(key, [])
+        if key in self.items:
+            cur = self.items[key]
+        else:                       # absent (a stored None is NOT absent)
+            self.items[key] = cur = []
+            insort(self._sorted_keys, key)
         if not isinstance(cur, list):
             raise TypeError(f"{self.name}[{key}] is not a list")
-        cur.extend(copy.deepcopy(list(items)))
-        return copy.deepcopy(cur)
+        cur.extend(_copy_value(list(items)))
+        return _copy_value(cur)
 
     def update_bitmap(self, index: int, key: str) -> List[bool]:
         """Atomically set bit ``index`` and return the bitmap (strong read)."""
@@ -72,13 +111,23 @@ class TableState:
 
     def list_prefix(self, prefix: str) -> List[str]:
         self.reads += 1
-        return sorted(k for k in self.items if k.startswith(prefix))
+        sk = self._sorted_keys
+        i = bisect_left(sk, prefix)
+        out: List[str] = []
+        while i < len(sk) and sk[i].startswith(prefix):
+            out.append(sk[i])
+            i += 1
+        return out
 
     def delete(self, keys: Sequence[str]) -> int:
         n = 0
+        sk = self._sorted_keys
         for k in keys:
             if k in self.items:
                 del self.items[k]
+                i = bisect_left(sk, k)
+                if i < len(sk) and sk[i] == k:
+                    sk.pop(i)
                 n += 1
         self.writes += len(list(keys))
         return n

@@ -1,4 +1,4 @@
-"""SimCloud — a deterministic discrete-event Jointcloud simulator.
+"""SimCloud — a deterministic, high-throughput discrete-event Jointcloud simulator.
 
 The container has no AWS/AliYun access, so the multi-cloud substrate the paper
 evaluates on is simulated here.  Everything *algorithmic* (checkpoint
@@ -21,19 +21,45 @@ Model
 * A crash policy hook can abort an execution at any effect boundary, which is
   how the property tests explore the duplicate-execution space of §4.1.2's
   "most extreme scenario".
+* Load substrate (both opt-in, off by default so single-workflow studies are
+  unaffected): per-FaaS *concurrency slots* — invocations wait for a free
+  slot, and minting a new slot pays a cold start (``concurrency=`` /
+  ``cold_start_ms=``) — and *contention-aware bandwidth*: when the topology
+  pins a per-pair link capacity, concurrent cross-cloud transfers share it
+  and :meth:`repro.core.costmodel.CostModel.wire_ms` stretches accordingly.
 
 Determinism: a seeded RNG drives latency jitter; the heap breaks ties by
-sequence number.  Same seed ⇒ bit-identical timelines.
+sequence number.  Same seed ⇒ bit-identical timelines (guarded by the digest
+regression tests in ``tests/test_simcloud_engine.py`` — see
+:func:`timeline_digest`).
+
+Engine invariants new effects must respect (the hot paths are index-based;
+see ROADMAP):
+
+* effect dispatch is a per-type table (``SimCloud._dispatch``), not an
+  isinstance chain — register new effect classes there;
+* ``FaaSSystem`` outage windows are kept merged + sorted so ``up_at`` is a
+  bisect — add windows via :meth:`FaaSSystem.add_outage`, never by mutating
+  ``outages`` directly;
+* ``records`` is mirrored into per-function / per-workflow / completed
+  indexes at enqueue time — reporting must go through ``executions_of`` /
+  ``completed`` / ``workflow_records`` instead of scanning ``records``;
+* scheduled events are ``(t, seq, fn, args)`` tuples — continuations are
+  disarmed via ``Execution.alive``, never by cancelling events.
 """
 
 from __future__ import annotations
 
+import hashlib
 import heapq
 import itertools
 import math
 import random
+from bisect import bisect_left, bisect_right, insort
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Generator, List, Optional, Sequence, Tuple
+from typing import (Any, Callable, Dict, Generator, List, Mapping, Optional,
+                    Tuple)
 
 from repro.backends import calibration as cal
 from repro.backends import shim
@@ -61,10 +87,50 @@ class Blob:
         return f"Blob({self.nbytes}b,{self.tag})"
 
 
+# Container sizes are memoized by identity with a top-level ``len`` guard:
+# stored lists may grow via append (len changes ⇒ recompute) but must not be
+# structurally resized at constant length — the only such pattern in the
+# repo, bitmap bit flips, is size-neutral (bool stays 5 bytes).  Entries keep
+# a strong reference to the container so ids cannot be recycled while cached;
+# the table is cleared wholesale when it fills.
+_SIZE_MEMO: Dict[int, Tuple[Any, int, int]] = {}
+_SIZE_MEMO_MAX = 1 << 16
+
+
 def estimate_size(obj: Any) -> int:
     """Rough wire size of a payload value, honoring explicit Blob sizes."""
+    t = obj.__class__
+    if t is Blob:
+        return obj.nbytes
+    if t is bytes:
+        return len(obj)
+    if t is str:
+        # UTF-8 length; the ascii flag is O(1) and covers nearly every key
+        return len(obj) if obj.isascii() else len(obj.encode())
+    if t is bool:
+        return 5
+    if t is int or t is float:
+        return 8
     if obj is None:
         return 4
+    if t is dict or t is list or t is tuple:
+        key = id(obj)
+        hit = _SIZE_MEMO.get(key)
+        if hit is not None and hit[0] is obj and hit[1] == len(obj):
+            return hit[2]
+        if t is dict:
+            size = 2
+            for k, v in obj.items():
+                size += estimate_size(k) + estimate_size(v) + 2
+        else:
+            size = 2
+            for v in obj:
+                size += estimate_size(v) + 1
+        if len(_SIZE_MEMO) >= _SIZE_MEMO_MAX:
+            _SIZE_MEMO.clear()
+        _SIZE_MEMO[key] = (obj, len(obj), size)
+        return size
+    # rare subclassed/odd types: original isinstance-chain semantics
     if isinstance(obj, Blob):
         return obj.nbytes
     if isinstance(obj, bytes):
@@ -93,12 +159,41 @@ class FaaSSystem:
     cloud: str
     flavor: cal.Flavor
     payload_quota: int
+    # Load substrate (None ⇒ unbounded pre-warmed capacity, the paper's
+    # setup; an int ⇒ that many concurrency slots, minted on demand with a
+    # cold-start penalty, then kept warm).
+    concurrency: Optional[int] = None
+    cold_start_ms: float = 0.0
 
     def __post_init__(self):
-        self.outages: List[Tuple[float, float]] = []
+        self.outages: List[Tuple[float, float]] = []     # raw, as scheduled
+        self._outage_starts: List[float] = []            # merged, sorted
+        self._outage_ends: List[float] = []
+        # slot accounting (only consulted when concurrency is not None)
+        self.slots_total = 0        # slots minted so far (≤ concurrency)
+        self.slots_busy = 0
+        self.cold_starts = 0
+        self.pending: deque = deque()   # (dep, payload, rec) awaiting a slot
+
+    def add_outage(self, t0: float, t1: float) -> None:
+        """Register an outage window, keeping the merged set sorted so
+        :meth:`up_at` stays a bisect.  Never append to ``outages`` directly."""
+        self.outages.append((t0, t1))
+        merged: List[Tuple[float, float]] = []
+        for a, b in sorted(self.outages):
+            if merged and a <= merged[-1][1]:
+                merged[-1] = (merged[-1][0], max(merged[-1][1], b))
+            else:
+                merged.append((a, b))
+        self._outage_starts = [a for a, _ in merged]
+        self._outage_ends = [b for _, b in merged]
 
     def up_at(self, t: float) -> bool:
-        return not any(t0 <= t < t1 for (t0, t1) in self.outages)
+        starts = self._outage_starts
+        if not starts:
+            return True
+        i = bisect_right(starts, t) - 1
+        return i < 0 or t >= self._outage_ends[i]
 
 
 @dataclass
@@ -184,19 +279,11 @@ class ExecutionRecord:
         return out
 
 
-class _Event:
-    __slots__ = ("t", "seq", "fn", "cancelled")
-
-    def __init__(self, t: float, seq: int, fn: Callable[[], None]):
-        self.t, self.seq, self.fn = t, seq, fn
-        self.cancelled = False
-
-    def __lt__(self, other: "_Event") -> bool:
-        return (self.t, self.seq) < (other.t, other.seq)
-
-
 class Execution:
     """One running attempt of a deployed function (drives its generator)."""
+
+    __slots__ = ("sim", "dep", "payload", "record", "gen", "effect_index",
+                 "alive", "faas_obj", "cloud")
 
     def __init__(self, sim: "SimCloud", dep: Deployment, payload: Any,
                  record: ExecutionRecord):
@@ -207,6 +294,8 @@ class Execution:
         self.gen: Generator = dep.handler(payload)
         self.effect_index = 0
         self.alive = True
+        self.faas_obj = sim.faas[dep.faas]     # hot-path cache
+        self.cloud = self.faas_obj.cloud
 
     # ---- generator stepping ------------------------------------------------
 
@@ -214,36 +303,56 @@ class Execution:
         self.record.t_start = self.sim.now
         self.record.status = "running"
         self.sim.running.setdefault(self.dep.faas, set()).add(self)
-        self._step(lambda: self.gen.send(None))
+        self._step(self.gen.send, None)
 
     def resume(self, value: Any) -> None:
         if not self.alive:
             return
-        self._step(lambda: self.gen.send(value))
+        self._step(self.gen.send, value)
 
     def throw(self, exc: BaseException) -> None:
         if not self.alive:
             return
-        self._step(lambda: self.gen.throw(exc))
+        self._step(self.gen.throw, exc)
 
-    def _step(self, advance: Callable[[], shim.Effect]) -> None:
-        try:
-            effect = advance()
-        except StopIteration as stop:
-            self._finish(stop.value)
+    def _step(self, advance: Callable[[Any], shim.Effect], arg: Any) -> None:
+        sim = self.sim
+        send = self.gen.send
+        # Synchronous effects (Trace/Now) complete at the current instant —
+        # loop over them here instead of recursing through
+        # perform → ok → resume, which would stack four frames per effect.
+        while True:
+            try:
+                effect = advance(arg)
+            except StopIteration as stop:
+                self._finish(stop.value)
+                return
+            except shim.ShimError as exc:
+                # Unhandled shim error escapes the handler: the attempt
+                # crashes and the FaaS at-least-once queue may retry it.
+                sim._crash_execution(self, reason=repr(exc))
+                return
+            # crash-policy hook: abort *before* performing the effect
+            # (models a process kill between two side effects — §4.1.2
+            # extreme scenario)
+            if sim.crash_policy is not None and sim.crash_policy(self, effect):
+                sim._crash_execution(self, reason="injected")
+                return
+            self.effect_index += 1
+            klass = effect.__class__
+            if klass is shim.Trace:
+                self.record.phases.append((sim.now, effect.phase))
+                advance, arg = send, None
+                continue
+            if klass is shim.Now:
+                advance, arg = send, sim.now
+                continue
+            handler = sim._dispatch.get(klass)
+            if handler is None:
+                sim.perform(self, effect, self.resume, self.throw)  # MRO path
+            else:
+                handler(self, effect, self.resume, self.throw)
             return
-        except shim.ShimError as exc:
-            # Unhandled shim error escapes the handler: the attempt crashes
-            # and the FaaS at-least-once queue may retry it.
-            self.sim._crash_execution(self, reason=repr(exc))
-            return
-        # crash-policy hook: abort *before* performing the effect (models a
-        # process kill between two side effects — §4.1.2 extreme scenario)
-        if self.sim.crash_policy is not None and self.sim.crash_policy(self, effect):
-            self.sim._crash_execution(self, reason="injected")
-            return
-        self.effect_index += 1
-        self.sim.perform(self, effect, self.resume, self.throw)
 
     def _finish(self, result: Any) -> None:
         self.alive = False
@@ -251,11 +360,13 @@ class Execution:
         self.record.status = "done"
         self.record.result = result
         self.sim.running.get(self.dep.faas, set()).discard(self)
-        faas = self.sim.faas[self.dep.faas]
+        self.sim._done_records.append(self.record)
+        faas = self.faas_obj
         mem = self.dep.memory_gb or faas.flavor.memory_gb
         self.sim.bill.charge_execution(faas.cloud, mem,
                                        self.record.t_end - self.record.t_start,
                                        faas.flavor.price_per_gb_s)
+        self.sim._release_slot(faas)
 
     def kill(self) -> None:
         """Abort this attempt (outage / injected crash).
@@ -270,12 +381,13 @@ class Execution:
         self.record.status = "crashed"
         self.sim.running.get(self.dep.faas, set()).discard(self)
         # Partial executions still bill their GB·s (clouds charge until kill).
-        faas = self.sim.faas[self.dep.faas]
+        faas = self.faas_obj
         mem = self.dep.memory_gb or faas.flavor.memory_gb
         if not math.isnan(self.record.t_start):
             self.sim.bill.charge_execution(faas.cloud, mem,
                                            self.record.t_end - self.record.t_start,
                                            faas.flavor.price_per_gb_s)
+        self.sim._release_slot(faas)
 
 
 # ==========================================================================
@@ -285,14 +397,24 @@ class Execution:
 
 class SimCloud:
     def __init__(self, config: Optional[dict] = None, *, seed: int = 0,
-                 jitter: float = 0.12):
+                 jitter: float = 0.12,
+                 concurrency: Optional[Mapping[str, int]] = None,
+                 cold_start_ms: Optional[float] = None):
+        """``concurrency`` maps FaaS ids ("aws/lambda") or cloud names
+        ("aws") to a slot count; systems it covers pay ``cold_start_ms``
+        (default ``calibration.COLD_START_MS``) whenever a new slot is
+        minted and queue when all slots are busy.  Systems it does not cover
+        keep the paper's pre-warmed unbounded-capacity behavior."""
         config = config or cal.default_jointcloud()
         self.rng = random.Random(seed)
         self.jitter = jitter
         self.now = 0.0
-        self._heap: List[_Event] = []
+        # heap entries are (t, seq, fn, args) — seq is a unique tie-break so
+        # comparison never reaches fn
+        self._heap: List[Tuple[float, int, Callable, tuple]] = []
         self._seq = itertools.count()
         self.bill = Bill()
+        self.events_processed = 0
 
         # Imported here, not at module top: repro.core's package init pulls
         # in workflow.py, which imports this module — a top-level import of
@@ -301,13 +423,19 @@ class SimCloud:
         self.topology = Topology.from_config(config)
         self.cost = CostModel(self.topology)
 
+        cold_ms = cal.COLD_START_MS if cold_start_ms is None else cold_start_ms
         self.faas: Dict[str, FaaSSystem] = {}
         self.stores: Dict[str, DataStoreService] = {}
         for cname, c in config["clouds"].items():
             for sysname, flavor in c.get("faas", {}).items():
                 fid = shim.faas_id(cname, sysname)
                 quota = cal.PAYLOAD_QUOTA.get(cname, cal.DEFAULT_PAYLOAD_QUOTA)
-                self.faas[fid] = FaaSSystem(fid, cname, flavor, quota)
+                conc = None
+                if concurrency:
+                    conc = concurrency.get(fid, concurrency.get(cname))
+                self.faas[fid] = FaaSSystem(
+                    fid, cname, flavor, quota, concurrency=conc,
+                    cold_start_ms=cold_ms if conc is not None else 0.0)
             for t in c.get("tables", []):
                 did = shim.ds_id(cname, t)
                 self.stores[did] = DataStoreService(did, cname, "table", TableState(did))
@@ -318,9 +446,39 @@ class SimCloud:
         self.deployments: Dict[Tuple[str, str], Deployment] = {}
         self.running: Dict[str, set] = {}
         self.records: List[ExecutionRecord] = []
+        # reporting indexes (kept in lock-step with ``records``)
+        self._by_function: Dict[str, List[ExecutionRecord]] = {}
+        self._done_records: List[ExecutionRecord] = []
+        self._wf_records: Dict[str, List[ExecutionRecord]] = {}
+        self._wf_keys: List[str] = []            # sorted, for prefix queries
         self._exec_ids = itertools.count()
         self.crash_policy: Optional[Callable[[Execution, shim.Effect], bool]] = None
         self.dropped: List[Tuple[str, str, Any]] = []   # (faas, function, payload)
+
+        # per-effect-type dispatch (engine invariant: extend this table, do
+        # not add isinstance chains)
+        self._dispatch: Dict[type, Callable] = {
+            shim.Now: self._perform_now,
+            shim.Trace: self._perform_trace,
+            shim.RunUser: self._perform_run_user,
+            shim.CreateClient: self._perform_create_client,
+            shim.Invoke: self._perform_invoke,
+            shim.DsCreate: self._perform_ds,
+            shim.DsGet: self._perform_ds,
+            shim.DsAppendGetList: self._perform_ds,
+            shim.DsUpdateBitmap: self._perform_ds,
+            shim.DsListPrefix: self._perform_ds,
+            shim.DsDelete: self._perform_ds,
+            shim.Parallel: self._perform_parallel,
+        }
+        self._ds_ops: Dict[type, Callable] = {
+            shim.DsCreate: self._ds_create,
+            shim.DsGet: self._ds_get,
+            shim.DsAppendGetList: self._ds_append_get_list,
+            shim.DsUpdateBitmap: self._ds_update_bitmap,
+            shim.DsListPrefix: self._ds_list_prefix,
+            shim.DsDelete: self._ds_delete,
+        }
 
     # ---- topology helpers -----------------------------------------------------
 
@@ -336,6 +494,31 @@ class SimCloud:
     def _jit(self, ms: float) -> float:
         return ms * (1.0 + self.rng.random() * self.jitter)
 
+    def _wire_flow(self, a: str, b: str, nbytes: int) -> float:
+        """Wire time of one transfer, registering it as an in-flight flow
+        when the a↔b link has a pinned capacity (contention-aware sharing).
+        Uncapped links take the zero-overhead path — no flow events, no
+        extra RNG draws — so default-topology timelines are untouched."""
+        if nbytes <= 0:
+            return 0.0
+        topo = self.topology
+        if a != b and topo.tracks_contention(a, b):
+            topo.open_flow(a, b, nbytes)
+            wire = self.cost.wire_ms(a, b, nbytes)   # sees this flow too
+            self.after(wire, topo.close_flow, a, b, nbytes)
+            return wire
+        return self.cost.wire_ms(a, b, nbytes)
+
+    def _wire_flow_roundtrip(self, a: str, b: str, up: int, down: int) -> float:
+        """Wire time of a request/response pair (coordination ops).  The two
+        legs are sequential, so under contention they occupy the link as ONE
+        flow of ``up + down`` bytes — not two simultaneous flows, which
+        would double-count the op against the pair's flow budget."""
+        topo = self.topology
+        if a != b and topo.tracks_contention(a, b):
+            return self._wire_flow(a, b, up + down)
+        return self.cost.wire_ms(a, b, up) + self.cost.wire_ms(a, b, down)
+
     # ---- deployment & invocation ----------------------------------------------
 
     def deploy(self, dep: Deployment) -> None:
@@ -345,15 +528,16 @@ class SimCloud:
 
     def submit(self, faas: str, function: str, payload: Any, t: float = 0.0) -> None:
         """External client async-invokes ``function`` at virtual time ``t``."""
-        self.at(t, lambda: self._enqueue(faas, function, payload, attempt=0))
+        self.at(t, self._enqueue, faas, function, payload, 0)
 
-    def at(self, t: float, fn: Callable[[], None]) -> _Event:
-        ev = _Event(max(t, self.now), next(self._seq), fn)
-        heapq.heappush(self._heap, ev)
-        return ev
+    def at(self, t: float, fn: Callable[..., None], *args: Any) -> None:
+        if t < self.now:
+            t = self.now
+        heapq.heappush(self._heap, (t, next(self._seq), fn, args))
 
-    def after(self, dt: float, fn: Callable[[], None]) -> _Event:
-        return self.at(self.now + dt, fn)
+    def after(self, dt: float, fn: Callable[..., None], *args: Any) -> None:
+        # hot path: dt is never negative, so no clamp — push directly
+        heapq.heappush(self._heap, (self.now + dt, next(self._seq), fn, args))
 
     def _enqueue(self, faas_id_: str, function: str, payload: Any, attempt: int) -> None:
         """Queue an accepted async invocation for execution (at-least-once)."""
@@ -363,22 +547,82 @@ class SimCloud:
         rec = ExecutionRecord(next(self._exec_ids), function, faas_id_,
                               t_queued=self.now, attempt=attempt, payload=payload)
         self.records.append(rec)
+        bucket = self._by_function.get(function)
+        if bucket is None:
+            self._by_function[function] = bucket = []
+        bucket.append(rec)
+        wfid = None
+        if payload.__class__ is dict:
+            ctl = payload.get("Control")
+            if ctl.__class__ is dict:
+                wfid = ctl.get("workflowId")
+            else:
+                wfid = payload.get("workflow_id")
+        if wfid is not None:
+            wfid = str(wfid)
+            wbucket = self._wf_records.get(wfid)
+            if wbucket is None:
+                self._wf_records[wfid] = wbucket = []
+                insort(self._wf_keys, wfid)
+            wbucket.append(rec)
+        self.after(self._jit(cal.ASYNC_QUEUE_MS), self._start_queued,
+                   dep, payload, rec)
 
-        def start():
-            faas = self.faas[faas_id_]
+    def _start_queued(self, dep: Deployment, payload: Any,
+                      rec: ExecutionRecord) -> None:
+        """Queue dwell elapsed: acquire a slot (if this FaaS meters
+        concurrency) and start the execution."""
+        faas = self.faas[dep.faas]
+        if not faas.up_at(self.now):
+            rec.status = "crashed"
+            self._retry(dep, payload, rec.attempt)
+            return
+        if faas.concurrency is not None:
+            if faas.slots_busy < faas.slots_total:       # warm slot free
+                faas.slots_busy += 1
+            elif faas.slots_total < faas.concurrency:    # mint a cold slot
+                faas.slots_total += 1
+                faas.slots_busy += 1
+                faas.cold_starts += 1
+                if faas.cold_start_ms > 0.0:
+                    self.after(self._jit(faas.cold_start_ms),
+                               self._begin_execution, dep, payload, rec)
+                    return
+            else:                                        # saturated: wait
+                faas.pending.append((dep, payload, rec))
+                return
+        Execution(self, dep, payload, rec).start()
+
+    def _begin_execution(self, dep: Deployment, payload: Any,
+                         rec: ExecutionRecord) -> None:
+        """Start an execution that already holds a slot (post cold start)."""
+        faas = self.faas[dep.faas]
+        if not faas.up_at(self.now):                     # outage hit mid-cold-start
+            rec.status = "crashed"
+            self._release_slot(faas)
+            self._retry(dep, payload, rec.attempt)
+            return
+        Execution(self, dep, payload, rec).start()
+
+    def _release_slot(self, faas: FaaSSystem) -> None:
+        if faas.concurrency is None:
+            return
+        faas.slots_busy -= 1
+        # hand the freed warm slot to the queue head (crashed pops drain on)
+        while faas.pending and faas.slots_busy < faas.slots_total:
+            dep, payload, rec = faas.pending.popleft()
             if not faas.up_at(self.now):
                 rec.status = "crashed"
-                self._retry(dep, payload, attempt)
-                return
-            ex = Execution(self, dep, payload, rec)
-            ex.start()
-
-        self.after(self._jit(cal.ASYNC_QUEUE_MS), start)
+                self._retry(dep, payload, rec.attempt)
+                continue
+            faas.slots_busy += 1
+            Execution(self, dep, payload, rec).start()
+            break
 
     def _retry(self, dep: Deployment, payload: Any, attempt: int) -> None:
         if attempt < dep.max_retries:
-            self.after(self._jit(cal.RETRY_BACKOFF_MS),
-                       lambda: self._enqueue(dep.faas, dep.function, payload, attempt + 1))
+            self.after(self._jit(cal.RETRY_BACKOFF_MS), self._enqueue,
+                       dep.faas, dep.function, payload, attempt + 1)
         else:
             self.dropped.append((dep.faas, dep.function, payload))
 
@@ -396,58 +640,57 @@ class SimCloud:
         if not systems:
             raise KeyError(f"no FaaS system matches {target}")
         for f in systems:
-            f.outages.append((t0, t1))
+            f.add_outage(t0, t1)
+            self.at(t0, self._kill_running_on, f.id)
 
-            def kill_running(fid=f.id):
-                for ex in list(self.running.get(fid, ())):
-                    self._crash_execution(ex, reason="outage")
-
-            self.at(t0, kill_running)
+    def _kill_running_on(self, fid: str) -> None:
+        for ex in list(self.running.get(fid, ())):
+            self._crash_execution(ex, reason="outage")
 
     # ---- effect interpreter ----------------------------------------------------
 
+    @staticmethod
+    def _resolve(table: Dict[type, Callable], effect: shim.Effect) -> Callable:
+        """Nearest-base handler for a subclassed effect, cached in ``table``
+        under the concrete class (shared by perform() and _ds_arrive)."""
+        for klass in effect.__class__.__mro__[1:]:
+            handler = table.get(klass)
+            if handler is not None:
+                table[effect.__class__] = handler
+                return handler
+        raise TypeError(f"unknown effect {effect!r}")
+
     def perform(self, ex: Execution, effect: shim.Effect,
                 ok: Callable[[Any], None], err: Callable[[BaseException], None]) -> None:
-        faas = self.faas[ex.dep.faas]
-        here = faas.cloud
+        handler = self._dispatch.get(effect.__class__)
+        if handler is None:
+            handler = self._resolve(self._dispatch, effect)
+        handler(ex, effect, ok, err)
 
-        if isinstance(effect, shim.Now):
-            ok(self.now)
+    def _perform_now(self, ex: Execution, effect: shim.Effect,
+                     ok: Callable, err: Callable) -> None:
+        ok(self.now)
 
-        elif isinstance(effect, shim.Trace):
-            ex.record.phases.append((self.now, effect.phase))
-            ok(None)
+    def _perform_trace(self, ex: Execution, effect: shim.Trace,
+                       ok: Callable, err: Callable) -> None:
+        ex.record.phases.append((self.now, effect.phase))
+        ok(None)
 
-        elif isinstance(effect, shim.RunUser):
-            dur = self._jit(ex.dep.workload.duration_ms(faas.flavor))
-            out = ex.dep.workload.output(effect.data)
-            self._hold(ex, dur, lambda: ok(out))
+    def _perform_run_user(self, ex: Execution, effect: shim.RunUser,
+                          ok: Callable, err: Callable) -> None:
+        dur = self._jit(ex.dep.workload.duration_ms(ex.faas_obj.flavor))
+        out = ex.dep.workload.output(effect.data)
+        self.after(dur, ok, out)
 
-        elif isinstance(effect, shim.CreateClient):
-            self._hold(ex, self._jit(cal.CLIENT_CREATE_MS), lambda: ok(effect.target))
-
-        elif isinstance(effect, shim.Invoke):
-            self._perform_invoke(ex, here, effect, ok, err)
-
-        elif isinstance(effect, (shim.DsCreate, shim.DsGet, shim.DsAppendGetList,
-                                 shim.DsUpdateBitmap, shim.DsListPrefix, shim.DsDelete)):
-            self._perform_ds(ex, here, effect, ok, err)
-
-        elif isinstance(effect, shim.Parallel):
-            self._perform_parallel(ex, effect, ok)
-
-        else:
-            raise TypeError(f"unknown effect {effect!r}")
-
-    def _hold(self, ex: Execution, dt: float, then: Callable[[], None]) -> None:
-        """Resume ``ex`` after ``dt`` ms (continuation is a no-op if killed)."""
-        self.after(dt, then)
+    def _perform_create_client(self, ex: Execution, effect: shim.CreateClient,
+                               ok: Callable, err: Callable) -> None:
+        self.after(self._jit(cal.CLIENT_CREATE_MS), ok, effect.target)
 
     # -- invoke ------------------------------------------------------------------
 
-    def _perform_invoke(self, ex: Execution, here: str, effect: shim.Invoke,
-                        ok: Callable[[Any], None], err: Callable[[BaseException], None],
-                        collect: Optional[Callable[[Any], None]] = None) -> None:
+    def _perform_invoke(self, ex: Execution, effect: shim.Invoke,
+                        ok: Callable[[Any], None],
+                        err: Callable[[BaseException], None]) -> None:
         target = self.faas.get(effect.faas)
         if target is None:
             err(shim.InvocationError(f"unknown FaaS {effect.faas}"))
@@ -457,88 +700,120 @@ class SimCloud:
             err(shim.PayloadTooLarge(
                 f"{nbytes}B > quota {target.payload_quota}B on {effect.faas}"))
             return
+        here = ex.cloud
         rtt = self._jit(self.rtt_ms(here, target.cloud))
+        self.after(rtt / 2, self._invoke_arrive,
+                   here, effect, target, nbytes, rtt, ok, err)
 
-        def arrive():
-            if not target.up_at(self.now):
-                # connection refused — caller learns after the return trip
-                self._hold(ex, self._jit(rtt / 2),
-                           lambda: err(shim.InvocationError(f"{effect.faas} is down")))
-                return
-            # control-plane accept + payload transfer; bill egress if cross-cloud
-            if target.cloud != here:
-                self.bill.charge_egress(here, nbytes,
-                                        self.cost.egress_price_per_gb(here))
-            self.bill.charge_invoke(target.cloud)
-            accept = self._jit(cal.INVOKE_API_MS) + self.cost.wire_ms(
-                here, target.cloud, nbytes)
-            self.after(accept, lambda: self._enqueue(effect.faas, effect.function,
-                                                     effect.payload, attempt=0))
-            self._hold(ex, accept + rtt / 2, lambda: ok(True))
-
-        self.after(rtt / 2, arrive)
+    def _invoke_arrive(self, here: str, effect: shim.Invoke, target: FaaSSystem,
+                       nbytes: int, rtt: float, ok: Callable, err: Callable) -> None:
+        if not target.up_at(self.now):
+            # connection refused — caller learns after the return trip
+            # (``rtt`` already carries jitter; no second draw)
+            self.after(rtt / 2, err,
+                       shim.InvocationError(f"{effect.faas} is down"))
+            return
+        # control-plane accept + payload transfer; bill egress if cross-cloud
+        if target.cloud != here:
+            self.bill.charge_egress(here, nbytes,
+                                    self.cost.egress_price_per_gb(here))
+        self.bill.charge_invoke(target.cloud)
+        accept = self._jit(cal.INVOKE_API_MS) + self._wire_flow(
+            here, target.cloud, nbytes)
+        self.after(accept, self._enqueue, effect.faas, effect.function,
+                   effect.payload, 0)
+        self.after(accept + rtt / 2, ok, True)
 
     # -- datastore -----------------------------------------------------------------
 
-    def _perform_ds(self, ex: Execution, here: str, effect: shim.Effect,
+    def _perform_ds(self, ex: Execution, effect: shim.Effect,
                     ok: Callable[[Any], None], err: Callable[[BaseException], None]) -> None:
         store = self.stores.get(effect.ds)
         if store is None:
             err(shim.DataStoreError(f"unknown datastore {effect.ds}"))
             return
+        here = ex.cloud
         rtt = self.rtt_ms(here, store.cloud)
+        self.after(rtt / 2, self._ds_arrive, here, effect, store, rtt, ok, err)
 
-        def apply() -> Tuple[Any, float, int, int]:
-            """Returns (result, extra_latency_ms, write_ops, read_ops, moved_bytes_out)."""
-            st = store.state
-            if isinstance(effect, shim.DsCreate):
-                nbytes = effect.size_bytes or estimate_size(effect.value)
-                created = st.create_if_absent(effect.key, effect.value)
-                move = nbytes if store.cloud != here else 0
-                wire = self.cost.wire_ms(here, store.cloud, nbytes)
-                return created, store.write_ms() + wire, 1, 0, move
-            if isinstance(effect, shim.DsGet):
-                val = st.get(effect.key)
-                nbytes = estimate_size(val)
-                move = nbytes if store.cloud != here else 0
-                wire = self.cost.wire_ms(here, store.cloud, nbytes)
-                return val, store.read_ms() + wire, 0, 1, move
-            if isinstance(effect, shim.DsAppendGetList):
-                val = st.append_and_get_list(effect.key, effect.items)
-                return val, store.write_ms() + store.read_ms(), 1, 1, 0
-            if isinstance(effect, shim.DsUpdateBitmap):
-                val = st.update_bitmap(effect.index, effect.key)
-                return val, store.write_ms() + store.read_ms(), 1, 1, 0
-            if isinstance(effect, shim.DsListPrefix):
-                return st.list_prefix(effect.prefix), store.read_ms(), 0, 1, 0
-            if isinstance(effect, shim.DsDelete):
-                n = st.delete(effect.keys)
-                return n, store.write_ms(), len(list(effect.keys)), 0, 0
-            raise TypeError(effect)
-
-        def arrive():
-            # The store itself is assumed HA (managed service); only the
-            # network from a dead cloud fails — modelled at the caller side.
-            result, op_ms, w, r, moved = apply()
-            if w:
-                self.bill.charge_ds_write(store.cloud, w)
-            if r:
-                self.bill.charge_ds_read(store.cloud, r)
-            if moved:
-                src = store.cloud if isinstance(effect, shim.DsGet) else here
-                self.bill.charge_egress(src, moved,
+    def _ds_arrive(self, here: str, effect: shim.Effect, store: DataStoreService,
+                   rtt: float, ok: Callable, err: Callable) -> None:
+        # The store itself is assumed HA (managed service); only the
+        # network from a dead cloud fails — modelled at the caller side.
+        op = self._ds_ops.get(effect.__class__)
+        if op is None:
+            op = self._resolve(self._ds_ops, effect)
+        result, op_ms, w, r, moves = op(here, store, effect)
+        if w:
+            self.bill.charge_ds_write(store.cloud, w)
+        if r:
+            self.bill.charge_ds_read(store.cloud, r)
+        for src, nb in moves:
+            if nb:
+                self.bill.charge_egress(src, nb,
                                         self.cost.egress_price_per_gb(src))
-            if isinstance(result, BaseException):
-                self._hold(ex, self._jit(op_ms) + rtt / 2, lambda: err(result))
-            else:
-                self._hold(ex, self._jit(op_ms) + rtt / 2, lambda: ok(result))
+        if isinstance(result, BaseException):
+            self.after(self._jit(op_ms) + rtt / 2, err, result)
+        else:
+            self.after(self._jit(op_ms) + rtt / 2, ok, result)
 
-        self.after(rtt / 2, arrive)
+    # Each op returns (result, op_ms, writes, reads, moves) where moves is a
+    # tuple of (egress_src_cloud, nbytes) for cross-cloud payload movement.
+
+    def _ds_create(self, here: str, store: DataStoreService,
+                   effect: shim.DsCreate):
+        nbytes = effect.size_bytes or estimate_size(effect.value)
+        created = store.state.create_if_absent(effect.key, effect.value)
+        wire = self._wire_flow(here, store.cloud, nbytes)
+        moves = ((here, nbytes),) if store.cloud != here else ()
+        return created, store.write_ms() + wire, 1, 0, moves
+
+    def _ds_get(self, here: str, store: DataStoreService, effect: shim.DsGet):
+        val = store.state.get(effect.key)
+        nbytes = estimate_size(val)
+        wire = self._wire_flow(here, store.cloud, nbytes)
+        moves = ((store.cloud, nbytes),) if store.cloud != here else ()
+        return val, store.read_ms() + wire, 0, 1, moves
+
+    def _ds_append_get_list(self, here: str, store: DataStoreService,
+                            effect: shim.DsAppendGetList):
+        val = store.state.append_and_get_list(effect.key, effect.items)
+        op_ms = store.write_ms() + store.read_ms()
+        moves: tuple = ()
+        if store.cloud != here:
+            # coordination payloads ride the wire like any other transfer:
+            # items up, the refreshed list back down
+            up = estimate_size(effect.items)
+            down = estimate_size(val)
+            op_ms += self._wire_flow_roundtrip(here, store.cloud, up, down)
+            moves = ((here, up), (store.cloud, down))
+        return val, op_ms, 1, 1, moves
+
+    def _ds_update_bitmap(self, here: str, store: DataStoreService,
+                          effect: shim.DsUpdateBitmap):
+        val = store.state.update_bitmap(effect.index, effect.key)
+        op_ms = store.write_ms() + store.read_ms()
+        moves: tuple = ()
+        if store.cloud != here:
+            up = 8                                # the bit index
+            down = estimate_size(val)             # the refreshed bitmap
+            op_ms += self._wire_flow_roundtrip(here, store.cloud, up, down)
+            moves = ((here, up), (store.cloud, down))
+        return val, op_ms, 1, 1, moves
+
+    def _ds_list_prefix(self, here: str, store: DataStoreService,
+                        effect: shim.DsListPrefix):
+        return store.state.list_prefix(effect.prefix), store.read_ms(), 0, 1, ()
+
+    def _ds_delete(self, here: str, store: DataStoreService,
+                   effect: shim.DsDelete):
+        n = store.state.delete(effect.keys)
+        return n, store.write_ms(), len(list(effect.keys)), 0, ()
 
     # -- parallel -----------------------------------------------------------------
 
     def _perform_parallel(self, ex: Execution, effect: shim.Parallel,
-                          ok: Callable[[Any], None]) -> None:
+                          ok: Callable[[Any], None], err: Callable) -> None:
         n = len(effect.effects)
         if n == 0:
             ok([])
@@ -561,21 +836,50 @@ class SimCloud:
 
     def run(self, t_max: float = 1e9) -> float:
         """Drain the event heap (up to t_max). Returns the final clock."""
-        while self._heap:
-            ev = heapq.heappop(self._heap)
-            if ev.cancelled:
-                continue
-            if ev.t > t_max:
+        heap = self._heap
+        pop = heapq.heappop
+        n = 0
+        while heap:
+            ev = pop(heap)
+            t = ev[0]
+            if t > t_max:
+                heapq.heappush(heap, ev)   # keep it for a resumed run
                 self.now = t_max
                 break
-            self.now = ev.t
-            ev.fn()
+            self.now = t
+            ev[2](*ev[3])
+            n += 1
+        self.events_processed += n
         return self.now
 
     # ---- reporting -----------------------------------------------------------------
 
     def executions_of(self, function: str) -> List[ExecutionRecord]:
-        return [r for r in self.records if r.function == function]
+        return list(self._by_function.get(function, ()))
 
     def completed(self) -> List[ExecutionRecord]:
-        return [r for r in self.records if r.status == "done"]
+        return sorted(self._done_records, key=lambda r: r.exec_id)
+
+    def workflow_records(self, prefix: str) -> List[ExecutionRecord]:
+        """All execution records whose workflow id starts with ``prefix``
+        (batch spin-offs carry a ``<wfid>-batchN`` id), in creation order —
+        a bisect over the sorted workflow-id index, not a record scan."""
+        keys = self._wf_keys
+        i = bisect_left(keys, prefix)
+        out: List[ExecutionRecord] = []
+        while i < len(keys) and keys[i].startswith(prefix):
+            out.extend(self._wf_records[keys[i]])
+            i += 1
+        out.sort(key=lambda r: r.exec_id)
+        return out
+
+
+def timeline_digest(sim: SimCloud) -> str:
+    """SHA-256 over every record's schedule + the final clock — the
+    regression oracle for 'same seed ⇒ bit-identical timelines'."""
+    h = hashlib.sha256()
+    for r in sim.records:
+        h.update(repr((r.exec_id, r.function, r.faas, r.t_queued, r.t_start,
+                       r.t_end, r.status, r.attempt)).encode())
+    h.update(repr(sim.now).encode())
+    return h.hexdigest()

@@ -77,6 +77,15 @@ class Topology:
     ``INTER_CLOUD_SAME_REGION_RTT_MS``, different ⇒
     ``INTER_CLOUD_CROSS_REGION_RTT_MS`` — so an N≥3 config only needs to
     pin the pairs it has measured.
+
+    Contention (opt-in): ``capacity_table`` / ``default_capacity_gbps`` pin
+    an *aggregate* Gbit/s per cloud pair.  The topology then also tracks
+    in-flight transfers (``open_flow``/``close_flow``, driven by SimCloud)
+    and :meth:`contention_factor` reports how much concurrent demand
+    oversubscribes the pipe — :meth:`CostModel.wire_ms` stretches by that
+    factor, so heavy traffic visibly lengthens transfer tails.  With no
+    capacity pinned (the default), the factor is always 1.0 and nothing is
+    tracked, which keeps single-workflow timelines bit-identical.
     """
 
     clouds: Tuple[str, ...]
@@ -88,6 +97,14 @@ class Topology:
     intra_bandwidth_gbps: float = cal.INTRA_CLOUD_BANDWIDTH_GBPS
     default_bandwidth_gbps: float = cal.BANDWIDTH_GBPS
     default_egress_price: float = cal.EGRESS_PRICE_PER_GB
+    capacity_table: Mapping[Tuple[str, str], float] = field(default_factory=dict)
+    default_capacity_gbps: Optional[float] = None
+    # runtime flow tracking (mutable on purpose: the *description* is frozen,
+    # the load on it is not)
+    _flows: Dict[Tuple[str, str], int] = field(default_factory=dict,
+                                               repr=False, compare=False)
+    _flow_bytes: Dict[Tuple[str, str], int] = field(default_factory=dict,
+                                                    repr=False, compare=False)
 
     @classmethod
     def from_config(cls, config: Optional[dict] = None) -> "Topology":
@@ -101,8 +118,14 @@ class Topology:
               for (a, b), g in config.get("bandwidth_gbps", {}).items()}
         egress = {c: float(p)
                   for c, p in config.get("egress_price_per_gb", {}).items()}
+        capacity = {_pair(a, b): float(g)
+                    for (a, b), g in config.get("link_capacity_gbps", {}).items()}
+        default_cap = config.get("default_link_capacity_gbps")
         return cls(clouds=clouds, regions=regions, rtt_table=rtt,
-                   bandwidth_table=bw, egress_table=egress)
+                   bandwidth_table=bw, egress_table=egress,
+                   capacity_table=capacity,
+                   default_capacity_gbps=(None if default_cap is None
+                                          else float(default_cap)))
 
     # ---- lookups (symmetric, with N≥3 fallback rules) ---------------------
 
@@ -124,6 +147,53 @@ class Topology:
     def egress_price_per_gb(self, cloud: str) -> float:
         return self.egress_table.get(cloud, self.default_egress_price)
 
+    # ---- contention-aware bandwidth sharing --------------------------------
+
+    def capacity_gbps(self, a: str, b: str) -> Optional[float]:
+        """Aggregate Gbit/s of the a↔b pipe, or None when uncapped.
+        Intra-cloud (VPC-class) links are never capped."""
+        if a == b:
+            return None
+        cap = self.capacity_table.get(_pair(a, b))
+        return cap if cap is not None else self.default_capacity_gbps
+
+    def tracks_contention(self, a: str, b: str) -> bool:
+        return self.capacity_gbps(a, b) is not None
+
+    def open_flow(self, a: str, b: str, nbytes: int = 0) -> None:
+        p = _pair(a, b)
+        self._flows[p] = self._flows.get(p, 0) + 1
+        self._flow_bytes[p] = self._flow_bytes.get(p, 0) + nbytes
+
+    def close_flow(self, a: str, b: str, nbytes: int = 0) -> None:
+        p = _pair(a, b)
+        n = self._flows.get(p, 0) - 1
+        self._flows[p] = n if n > 0 else 0
+        left = self._flow_bytes.get(p, 0) - nbytes
+        self._flow_bytes[p] = left if left > 0 else 0
+
+    def concurrent_flows(self, a: str, b: str) -> int:
+        return self._flows.get(_pair(a, b), 0)
+
+    def inflight_bytes(self, a: str, b: str) -> int:
+        """Bytes currently on the a↔b wire — a telemetry gauge (load
+        dashboards, future byte-weighted sharing / online re-planning);
+        :meth:`contention_factor` itself is flow-count-based."""
+        return self._flow_bytes.get(_pair(a, b), 0)
+
+    def contention_factor(self, a: str, b: str) -> float:
+        """≥1.0 slowdown of a transfer starting now: concurrent per-flow
+        demand over the pair's aggregate capacity (fair-share TCP model) —
+        1.0 while demand fits the pipe, proportional once it exceeds it."""
+        cap = self.capacity_gbps(a, b)
+        if cap is None:
+            return 1.0
+        n = self._flows.get(_pair(a, b), 0)
+        if n <= 0:
+            return 1.0
+        demand = n * self.bandwidth_gbps(a, b)
+        return demand / cap if demand > cap else 1.0
+
 
 # ==========================================================================
 # CostModel — every byte→ms / byte→$ conversion, in one place
@@ -142,6 +212,10 @@ class CostModel:
                  rtt_override: Optional[Callable[[str, str], float]] = None):
         self.topology = topology or Topology.from_config()
         self._rtt_override = rtt_override
+        # wire_ms fast path: an uncontended topology (no capacities pinned)
+        # never needs the per-call contention lookup
+        self._maybe_contended = bool(self.topology.capacity_table) or \
+            self.topology.default_capacity_gbps is not None
 
     # ---- latency ----------------------------------------------------------
 
@@ -154,12 +228,19 @@ class CostModel:
         """Serialization time of ``nbytes`` on the a↔b link.
 
         The only byte→ms conversion in the codebase: bytes ×8 → bits,
-        divided by the link's Gbit/s.
+        divided by the link's Gbit/s — stretched by the topology's
+        :meth:`Topology.contention_factor` when concurrent flows
+        oversubscribe a capacity-pinned pair (1.0 on uncapped links and
+        whenever nothing else is in flight, e.g. at planning time).
         """
         if nbytes <= 0:
             return 0.0
         gbps = self.topology.bandwidth_gbps(a, b)
-        return (nbytes * 8 / (gbps * 1e9)) * 1000.0
+        ms = (nbytes * 8 / (gbps * 1e9)) * 1000.0
+        if not self._maybe_contended:
+            return ms
+        factor = self.topology.contention_factor(a, b)
+        return ms * factor if factor != 1.0 else ms
 
     def transfer_ms(self, a: str, b: str, nbytes: int) -> float:
         """Latency of moving ``nbytes`` between clouds (RTT + wire time)."""

@@ -29,8 +29,8 @@ well-defined variant (noted in DESIGN.md):
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
-from typing import List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Sequence, Tuple
 
 BITMAP_SUFFIX = "-bitmap"
 OUTPUT_SUFFIX = "-output"
@@ -68,22 +68,28 @@ class Control:
 
     # ---- transitions ----------------------------------------------------------
 
+    # (direct construction, not dataclasses.replace — these are hot on the
+    # simulator's per-hop path and replace() re-runs field introspection)
+
     def advance(self, next_step: int) -> "Control":
         """Sequence/Choice hop to a node at static level ``next_step``."""
-        return replace(self, step=next_step)
+        return Control(self.workflow_id, next_step, self.branch, self.iteration)
 
     def push_branch(self, index: int, next_step: int) -> "Control":
         """Fan-out / Map hop: push the branch index for the target."""
-        return replace(self, step=next_step, branch=self.branch + (index,))
+        return Control(self.workflow_id, next_step, self.branch + (index,),
+                       self.iteration)
 
     def pop_to_depth(self, depth: int, next_step: int) -> "Control":
         """Fan-in hop (PopAndMerge): keep the common-prefix stack of length
         ``depth`` — identical for every peer of the fan-in by construction."""
-        return replace(self, step=next_step, branch=self.branch[:depth])
+        return Control(self.workflow_id, next_step, self.branch[:depth],
+                       self.iteration)
 
     def next_iteration(self, back_step: int) -> "Control":
         """Cycle back-edge: re-enter the loop head with a fresh iteration."""
-        return replace(self, step=back_step, iteration=self.iteration + 1)
+        return Control(self.workflow_id, back_step, self.branch,
+                       self.iteration + 1)
 
     # ---- (de)serialization — JointλObjects travel as plain dicts ---------------
 

@@ -37,7 +37,8 @@ from repro.backends.shim import (CreateClient, DsAppendGetList, DsCreate, DsDele
                                  InvocationError, Parallel, RunUser, Trace)
 from repro.core import subgraph as sg
 from repro.core.jlobject import JLObject, fits_quota
-from repro.core.naming import (BITMAP_SUFFIX, Control, collaboration_key)
+from repro.core.naming import (BITMAP_SUFFIX, IVK_SUFFIX, OUTPUT_SUFFIX,
+                               Control, collaboration_key)
 
 # value envelope so a stored ``None`` output is distinguishable from "absent"
 def _env(value: Any) -> dict:
@@ -55,9 +56,10 @@ class WorkflowState:
         self.view = view
         self.jl = jl
         self.control = jl.control
-        self.function_id = self.control.function_id(view.name)
-        self.output_key = self.control.output_key(view.name)
-        self.ivk_key = self.control.ivk_key(view.name)
+        fid = self.control.function_id(view.name)   # built once, not thrice
+        self.function_id = fid
+        self.output_key = fid + OUTPUT_SUFFIX
+        self.ivk_key = fid + IVK_SUFFIX
         self.output_ds = view.output_ds
         self.table = view.home_table
         self.output_ckp_hit = False
@@ -246,9 +248,10 @@ def _plan_one(wfs: WorkflowState, info: sg.NextFunctionInfo, ctl: Control,
 def _plan_map(wfs: WorkflowState, info: sg.NextFunctionInfo, output: Sequence) -> Generator:
     planned: List[_Planned] = []
     n = len(output)
+    vals = list(output)        # one shared snapshot for all branches (O(n), not O(n²))
     for j in range(n):
         ctl = wfs.control.push_branch(j, info.step)
-        p = yield from _plan_one(wfs, info, ctl, list(output), key=f"{info.name}#{j}",
+        p = yield from _plan_one(wfs, info, ctl, vals, key=f"{info.name}#{j}",
                                  select=j)
         p[0].event["Meta"]["fanin_size"] = n       # dynamic fan-in sizing
         planned += p

@@ -63,17 +63,10 @@ class DeployedWorkflow:
     # ---- result extraction -------------------------------------------------
 
     def executions(self, workflow_id: str):
-        """All execution records belonging to one workflow instance."""
-        out = []
-        for r in self.sim.records:
-            p = r.payload
-            wfid = None
-            if isinstance(p, dict):
-                wfid = (p.get("workflow_id")
-                        or p.get("Control", {}).get("workflowId"))
-            if wfid is not None and str(wfid).startswith(workflow_id):
-                out.append(r)
-        return out
+        """All execution records belonging to one workflow instance
+        (including ``-batchN`` spin-offs) — served from SimCloud's sorted
+        workflow-id index, not a scan over every record."""
+        return self.sim.workflow_records(str(workflow_id))
 
     def makespan_ms(self, workflow_id: str, *, include_gc: bool = False) -> float:
         recs = [r for r in self.executions(workflow_id)

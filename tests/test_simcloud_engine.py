@@ -1,0 +1,424 @@
+"""Engine-rework guards: seeded determinism (timeline digests), the load
+substrate (concurrency slots, cold starts, bandwidth contention), the
+indexed hot paths, and the two billing/jitter bugfixes.
+
+The pinned digests are the regression oracle for "same seed ⇒ bit-identical
+timelines": any change to RNG draw order, event scheduling order, or latency
+arithmetic flips them.  ``PRE_REWORK_SEQ_DIGEST`` was captured on the
+pre-rework (isinstance-chain, closure-based) engine — the dispatch-table
+engine must still produce it, proving the rework changed no virtual-time
+schedule.  Scenarios touched by this PR's two *intentional* model fixes
+(cross-cloud coordination ops now pay wire+egress; the connection-refused
+path no longer double-jitters) pin post-fix values.
+"""
+
+import pytest
+
+from repro.backends import calibration as cal
+from repro.backends.datastore import TableState
+from repro.backends.simcloud import (Blob, FaaSSystem, SimCloud, Workload,
+                                     estimate_size, timeline_digest)
+from repro.core import workflow as wf
+from repro.core.costmodel import CostModel, Topology
+from repro.core.subgraph import WorkflowSpec
+
+AWS = "aws/lambda"
+ALI = "aliyun/fc"
+
+# Captured on the PRE-rework engine (commit 0c8ff56): a same-cloud pipeline
+# exercises queue/exec/checkpoint scheduling but none of the intentionally
+# fixed paths, so the reworked engine must reproduce it bit-for-bit.
+PRE_REWORK_SEQ_DIGEST = \
+    "12d0b8fb14f8b478386113a502332c6769dbe3ea246ef2f9aad010abb17523c4"
+# Post-fix pins (cross-cloud coordination billing / single-jitter refusal).
+DIAMOND_DIGEST = \
+    "d0dcb764fb2f4cd040888ac24d9cb092a1c8daed446392c476a31c4f9cf126fd"
+OUTAGE_DIGEST = \
+    "980be87d97424efd77069cc657dd931cba496ba1dc65c2071f58ce18de1a7a22"
+
+
+def _seq_samecloud():
+    spec = WorkflowSpec("seq-same", gc=False)
+    spec.function("a", AWS, workload=Workload(compute_ms=20, fn=lambda x: x + 1))
+    spec.function("b", AWS, workload=Workload(compute_ms=30, fn=lambda x: x * 2))
+    spec.sequence("a", "b")
+    sim = SimCloud(seed=7)
+    dep = wf.deploy(sim, spec)
+    for i in range(5):
+        dep.start(i, t=i * 800.0)
+    sim.run()
+    return sim
+
+
+def _diamond_crosscloud():
+    spec = WorkflowSpec("diamond")
+    spec.function("a", AWS, workload=Workload(fn=lambda x: x))
+    for i, f in enumerate(["b", "c", "d"]):
+        spec.function(f, ALI if i % 2 else AWS,
+                      workload=Workload(fn=lambda x, i=i: x + i))
+    spec.function("agg", ALI, workload=Workload(fn=lambda xs: sorted(xs)))
+    spec.fanout("a", ["b", "c", "d"])
+    spec.fanin(["b", "c", "d"], "agg")
+    sim = SimCloud(seed=3)
+    dep = wf.deploy(sim, spec)
+    for i in range(4):
+        dep.start(i, t=i * 1500.0)
+    sim.run()
+    return sim
+
+
+def _outage_failover():
+    spec = WorkflowSpec("fo")
+    spec.function("a", AWS, workload=Workload(fn=lambda x: x))
+    spec.function("b", ALI, failover=[AWS], workload=Workload(fn=lambda x: x + 1))
+    spec.sequence("a", "b")
+    sim = SimCloud(seed=1)
+    dep = wf.deploy(sim, spec)
+    sim.schedule_outage("aliyun", 0, 1e9)
+    dep.start(1)
+    sim.run()
+    return sim
+
+
+# ---- determinism / digest regression ---------------------------------------
+
+
+def test_rework_preserves_prepr_schedule():
+    assert timeline_digest(_seq_samecloud()) == PRE_REWORK_SEQ_DIGEST
+
+
+def test_crosscloud_digest_pinned():
+    assert timeline_digest(_diamond_crosscloud()) == DIAMOND_DIGEST
+
+
+def test_outage_digest_pinned():
+    assert timeline_digest(_outage_failover()) == OUTAGE_DIGEST
+
+
+def test_same_seed_bit_identical_under_load_substrate():
+    """Determinism must also hold with slots + contention enabled."""
+    def go():
+        sim = SimCloud(cal.contended_jointcloud(), seed=9,
+                       concurrency={"aws": 2, "aliyun": 2})
+        spec = WorkflowSpec("load", gc=False)
+        spec.function("a", AWS, workload=Workload(
+            compute_ms=40, fn=lambda x: Blob(900_000)))
+        spec.function("b", ALI, workload=Workload(fn=lambda x: 1))
+        spec.sequence("a", "b")
+        dep = wf.deploy(sim, spec)
+        for i in range(8):
+            dep.start(i, t=i * 10.0)
+        sim.run()
+        return timeline_digest(sim)
+
+    assert go() == go()
+
+
+# ---- load substrate: concurrency slots & cold starts ------------------------
+
+
+def _slot_sim(concurrency, n=4, fixed_ms=100.0, cold=500.0):
+    sim = SimCloud(seed=0, jitter=0.0, concurrency=concurrency,
+                   cold_start_ms=cold)
+    spec = WorkflowSpec("s", gc=False)
+    spec.function("f", AWS, workload=Workload(fixed_ms=fixed_ms,
+                                              fn=lambda x: x))
+    dep = wf.deploy(sim, spec)
+    for i in range(n):
+        dep.start(i, t=0.0)
+    sim.run()
+    recs = sorted((r for r in sim.executions_of("f")), key=lambda r: r.t_start)
+    return sim, recs
+
+
+def test_concurrency_slots_serialize():
+    sim, recs = _slot_sim({"aws/lambda": 1})
+    starts = [r.t_start for r in recs]
+    # one slot ⇒ strictly serialized: each start waits for the previous end
+    for prev, r in zip(recs, recs[1:]):
+        assert r.t_start >= prev.t_end
+    assert sim.faas["aws/lambda"].cold_starts == 1
+
+
+def test_two_slots_overlap_pairwise():
+    sim, recs = _slot_sim({"aws/lambda": 2})
+    # first two run concurrently, third waits for a release
+    assert recs[0].t_start == recs[1].t_start
+    assert recs[2].t_start >= min(recs[0].t_end, recs[1].t_end)
+    assert sim.faas["aws/lambda"].cold_starts == 2
+
+
+def test_cold_start_charged_once_per_slot():
+    sim, recs = _slot_sim({"aws/lambda": 1}, n=3, cold=500.0)
+    # first start pays queue dwell + cold start; later warm starts do not
+    assert recs[0].t_start >= 500.0
+    assert recs[1].t_start - recs[0].t_end < 500.0
+    assert sim.faas["aws/lambda"].cold_starts == 1
+
+
+def test_unconfigured_faas_keeps_prewarmed_behavior():
+    sim, recs = _slot_sim(None, n=4)
+    assert all(r.t_start < 100.0 for r in recs)        # nobody waited
+    assert sim.faas["aws/lambda"].cold_starts == 0
+
+
+# ---- load substrate: contention-aware bandwidth -----------------------------
+
+
+def test_contention_factor_flat_then_proportional():
+    topo = Topology.from_config(cal.contended_jointcloud(
+        per_flow_gbps=0.1, capacity_gbps=0.4))
+    cm = CostModel(topo)
+    base = cm.wire_ms("aws", "aliyun", 1_000_000)
+    for _ in range(4):                       # ≤ 4 full-rate flows: flat
+        topo.open_flow("aws", "aliyun", 1_000_000)
+        assert cm.wire_ms("aws", "aliyun", 1_000_000) == pytest.approx(base)
+    topo.open_flow("aws", "aliyun", 1_000_000)   # 5th flow oversubscribes
+    assert cm.wire_ms("aws", "aliyun", 1_000_000) == pytest.approx(base * 5 * 0.1 / 0.4)
+    for _ in range(5):
+        topo.close_flow("aws", "aliyun", 1_000_000)
+    assert topo.concurrent_flows("aws", "aliyun") == 0
+    assert cm.wire_ms("aws", "aliyun", 1_000_000) == pytest.approx(base)
+
+
+def test_inflight_byte_telemetry():
+    """The topology's per-pair byte gauge (load telemetry for future
+    schedulers) must track open/close symmetrically."""
+    topo = Topology.from_config(cal.contended_jointcloud())
+    topo.open_flow("aws", "aliyun", 1000)
+    topo.open_flow("aliyun", "aws", 500)      # symmetric pair key
+    assert topo.inflight_bytes("aws", "aliyun") == 1500
+    topo.close_flow("aws", "aliyun", 1000)
+    assert topo.inflight_bytes("aws", "aliyun") == 500
+    topo.close_flow("aws", "aliyun", 500)
+    assert topo.inflight_bytes("aws", "aliyun") == 0
+    assert topo.concurrent_flows("aws", "aliyun") == 0
+
+
+def test_bounded_run_keeps_future_events():
+    """run(t_max) must not swallow the first event beyond the horizon —
+    a resumed run() continues the timeline."""
+    sim = SimCloud(seed=0)
+    seen = []
+    sim.at(50.0, seen.append, "early")
+    sim.at(200.0, seen.append, "late")
+    sim.run(t_max=100.0)
+    assert seen == ["early"] and sim.now == 100.0
+    sim.run()
+    assert seen == ["early", "late"]
+
+
+def test_uncapped_topology_tracks_nothing():
+    topo = Topology.from_config(cal.default_jointcloud())
+    assert not topo.tracks_contention("aws", "aliyun")
+    assert topo.contention_factor("aws", "aliyun") == 1.0
+
+
+def test_concurrent_transfers_stretch_makespan():
+    def worst(n, capacity):
+        sim = SimCloud(cal.contended_jointcloud(per_flow_gbps=0.1,
+                                                capacity_gbps=capacity),
+                       seed=0, jitter=0.0)
+        spec = WorkflowSpec("x", gc=False)
+        spec.function("a", AWS, workload=Workload(fn=lambda x: Blob(1_000_000)))
+        spec.function("b", ALI, workload=Workload(fn=lambda x: 1))
+        spec.sequence("a", "b")
+        dep = wf.deploy(sim, spec)
+        ids = [dep.start(0, t=0.0) for _ in range(n)]
+        sim.run()
+        return max(dep.makespan_ms(w) for w in ids)
+
+    sub = worst(2, 0.2)          # 2 flows fit a 2-full-rate-flow pipe
+    over = worst(8, 0.2)         # 8 concurrent flows fair-share it
+    assert sub == pytest.approx(worst(1, 0.2))   # flat below capacity
+    assert over > sub * 1.5                      # visibly stretched above
+
+
+# ---- engine hot-path indexes -----------------------------------------------
+
+
+def test_effect_subclasses_dispatch_like_isinstance():
+    """The dispatch table must accept effect subclasses (the pre-rework
+    isinstance chain did) — in perform() and in the ds-op second stage."""
+    from repro.backends import shim
+    from repro.backends.simcloud import Deployment
+
+    class TaggedGet(shim.DsGet):
+        pass
+
+    got = {}
+
+    def handler(event):
+        yield shim.DsCreate("aws/dynamodb", "k", 41)
+        got["val"] = yield TaggedGet("aws/dynamodb", "k")
+        return None
+
+    sim = SimCloud(seed=0)
+    sim.deploy(Deployment(function="h", faas=AWS, handler=handler))
+    sim.submit(AWS, "h", {})
+    sim.run()
+    assert got["val"] == 41
+
+
+def test_outage_windows_merge_and_bisect():
+    f = FaaSSystem("aws/lambda", "aws", cal.CPU_AWS, 256 * 1024)
+    f.add_outage(100.0, 200.0)
+    f.add_outage(150.0, 250.0)     # overlaps — must merge
+    f.add_outage(400.0, 500.0)
+    assert f.up_at(99.9)
+    assert not f.up_at(100.0)
+    assert not f.up_at(249.0)      # covered by the merged [100, 250)
+    assert f.up_at(250.0)
+    assert f.up_at(399.0)
+    assert not f.up_at(450.0)
+    assert f.up_at(500.0)
+
+
+def test_record_indexes_match_bruteforce():
+    sim = _diamond_crosscloud()
+    for fn in {"a", "agg"}:
+        assert sim.executions_of(fn) == [r for r in sim.records
+                                         if r.function == fn]
+    assert sim.completed() == [r for r in sim.records if r.status == "done"]
+
+
+def test_workflow_records_prefix_index():
+    spec = WorkflowSpec("wfx", gc=False)
+    spec.function("a", AWS, workload=Workload(fn=lambda x: x))
+    spec.function("b", ALI, workload=Workload(fn=lambda x: x))
+    spec.sequence("a", "b")
+    sim = SimCloud(seed=4)
+    dep = wf.deploy(sim, spec)
+    wids = [dep.start(i, t=i * 100.0) for i in range(11)]
+    sim.run()
+    for wid in wids:
+        recs = dep.executions(wid)
+        assert len(recs) == 2 and {r.function for r in recs} == {"a", "b"}
+        # wfx-000001 must not swallow wfx-000010's records
+        brute = [r for r in sim.records
+                 if isinstance(r.payload, dict)
+                 and str(r.payload.get("workflow_id")
+                         or r.payload.get("Control", {}).get("workflowId")
+                         ).startswith(wid)]
+        assert recs == brute
+
+
+def test_list_prefix_index_survives_delete():
+    st = TableState("t")
+    for k in ["wf1/a", "wf1/b", "wf2/a", "zz"]:
+        st.create_if_absent(k, 1)
+    assert st.list_prefix("wf1/") == ["wf1/a", "wf1/b"]
+    st.delete(["wf1/a", "missing"])
+    assert st.list_prefix("wf1/") == ["wf1/b"]
+    assert st.list_prefix("wf") == ["wf1/b", "wf2/a"]
+    st.append_and_get_list("wf1/lst", [1])
+    assert st.list_prefix("wf1/") == ["wf1/b", "wf1/lst"]
+    # a stored None is a type error, not an implicit list — and must not
+    # corrupt the key index with a duplicate insort
+    st.create_if_absent("none-key", None)
+    with pytest.raises(TypeError):
+        st.append_and_get_list("none-key", [1])
+    assert st.list_prefix("none-key") == ["none-key"]
+
+
+# ---- estimate_size fast paths & memo ----------------------------------------
+
+
+def test_estimate_size_values_unchanged():
+    cases = [None, True, 7, 3.14, "héllo", "ascii", b"xyz", Blob(123),
+             {"k": [1, 2, "s"]}, (1, (2, 3)), ["a", {"b": None}]]
+    for obj in cases:
+        got = estimate_size(obj)
+        assert got == _reference_size(obj), obj
+
+
+def _reference_size(obj):
+    if obj is None:
+        return 4
+    if isinstance(obj, Blob):
+        return obj.nbytes
+    if isinstance(obj, bytes):
+        return len(obj)
+    if isinstance(obj, str):
+        return len(obj.encode())
+    if isinstance(obj, bool):
+        return 5
+    if isinstance(obj, (int, float)):
+        return 8
+    if isinstance(obj, dict):
+        return 2 + sum(_reference_size(k) + _reference_size(v) + 2
+                       for k, v in obj.items())
+    if isinstance(obj, (list, tuple)):
+        return 2 + sum(_reference_size(v) + 1 for v in obj)
+    return len(repr(obj))
+
+
+def test_estimate_size_memo_invalidates_on_growth():
+    lst = [1, 2, 3]
+    s0 = estimate_size(lst)
+    lst.append(4)                  # checkpoint-list append pattern
+    assert estimate_size(lst) == s0 + 9   # +8 int +1 separator
+
+
+def test_estimate_size_bitmap_flip_is_size_neutral():
+    bm = [False] * 8
+    s0 = estimate_size(bm)
+    bm[3] = True                   # fan-in bitmap pattern: len unchanged
+    assert estimate_size(bm) == s0
+
+
+# ---- billing/jitter bugfix satellites ---------------------------------------
+
+
+def test_crosscloud_coordination_ops_pay_egress():
+    """DsAppendGetList/DsUpdateBitmap from another cloud move real bytes."""
+    from repro.backends.simcloud import Deployment
+
+    def egress_for(faas_id):
+        sim = SimCloud(seed=0, jitter=0.0)
+        sim.deploy(Deployment(function="h", faas=faas_id, handler=_coord_handler))
+        sim.submit(faas_id, "h", {"x": 1})
+        sim.run()
+        return sim.bill.egress_cost, sim.bill.counters["egress_bytes"]
+
+    intra_cost, intra_bytes = egress_for(AWS)
+    cross_cost, cross_bytes = egress_for(ALI)
+    assert intra_cost == 0.0 and intra_bytes == 0
+    assert cross_cost > 0.0
+    # both directions billed: items+index up, list+bitmap back
+    assert cross_bytes > 1000
+
+
+def _coord_handler(event):
+    from repro.backends import shim
+    yield shim.DsCreate("aws/dynamodb", "bm", [False] * 64)
+    yield shim.DsAppendGetList("aws/dynamodb", "lst", ["x" * 1000])
+    yield shim.DsUpdateBitmap("aws/dynamodb", "bm", 0)
+    return None
+
+
+def test_connection_refused_single_jitter():
+    """The refused path reuses the already-jittered rtt: with jitter j the
+    caller learns within rtt×(1+j); the old double draw could exceed it."""
+    from repro.backends import shim
+    from repro.backends.simcloud import Deployment
+
+    rtt_base = cal.INTER_CLOUD_SAME_REGION_RTT_MS
+    for seed in range(20):
+        sim = SimCloud(seed=seed, jitter=1.0)
+        sim.schedule_outage("aliyun", 0, 1e9)
+        seen = {}
+
+        def handler(event):
+            t0 = yield shim.Now()
+            try:
+                yield shim.Invoke(ALI, "nope", {"p": 1})
+            except shim.InvocationError:
+                t1 = yield shim.Now()
+                seen["latency"] = t1 - t0
+            return None
+
+        sim.deploy(Deployment(function="h", faas=AWS, handler=handler))
+        sim.submit(AWS, "h", {})
+        sim.run()
+        assert seen["latency"] <= rtt_base * 2.0 + 1e-9
