@@ -16,7 +16,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 from repro.backends import calibration as cal
 from repro.backends.simcloud import Blob, SimCloud, Workload
 from repro.core import workflow as wf
-from repro.core.subgraph import WorkflowSpec
+from repro.core.subgraph import FunctionSpec, WorkflowSpec
 
 AWS_CPU = "aws/lambda"
 ALI_CPU = "aliyun/fc"
@@ -147,6 +147,73 @@ def jointlambda_run(spec: WorkflowSpec, n: int = 12, *, input_value: Any = 0,
     ids = [dep.start(input_value, t=i * spacing_ms) for i in range(n)]
     sim.run()
     return [dep.makespan_ms(w) for w in ids], sim
+
+
+def jointlambda_run_local(spec: WorkflowSpec, n: int = 2, *, input_value: Any = 0,
+                          concurrency: int = 8, timeout_s: float = 120.0,
+                          localize: bool = True):
+    """The same workflow artifact on the concurrent local backend, through
+    the one ``core.workflow.deploy`` path: nodes run real jitted JAX
+    callables and makespans are wall-clock ms.  Returns (makespans, runner)."""
+    from repro.backends.localjax import LocalRunner
+    lspec = localize_spec(spec) if localize else spec
+    runner = LocalRunner(concurrency=concurrency)
+    dep = wf.deploy(runner, lspec)
+    ids = [dep.start(input_value) for _ in range(n)]
+    runner.run(timeout_s=timeout_s)
+    return [dep.makespan_ms(w) for w in ids], runner
+
+
+# Shared jitted ops for the local arm (repro.kernels reference kernels are
+# cheap jnp on CPU); compiled once so stage timings measure execution.
+_LOCAL_OPS = None
+
+
+def _local_ops():
+    global _LOCAL_OPS
+    if _LOCAL_OPS is None:
+        import jax
+        import jax.numpy as jnp
+        from repro.kernels.ref import flash_attention_ref
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (96, 96), jnp.float32)
+        q = jax.random.normal(key, (1, 16, 2, 16), jnp.float32)
+        mm = jax.jit(lambda a: jnp.tanh(a @ a))
+        attn = jax.jit(lambda qq: flash_attention_ref(qq, qq, qq))
+        mm(x).block_until_ready()
+        attn(q).block_until_ready()
+        _LOCAL_OPS = (mm, attn, x, q)
+    return _LOCAL_OPS
+
+
+def localize_spec(spec: WorkflowSpec) -> WorkflowSpec:
+    """Copy of ``spec`` whose stages run *real* JAX compute on the local
+    backend: accel stages run a small jitted flash-attention, the rest a
+    jitted matmul, repeated ∝ the stage's reference duration; the structural
+    output (what the DAG actually transfers) is unchanged, so placement,
+    quotas and fan-in semantics stay identical to the sim arm."""
+    mm, attn, x, q = _local_ops()
+    out = WorkflowSpec(spec.name, gc=spec.gc_enabled)
+    out.edges = list(spec.edges)
+    out.entry = spec.entry
+    for name, f in spec.functions.items():
+        w = f.workload if isinstance(f.workload, Workload) else Workload(fn=f.workload)
+        reps = max(1, int(round((w.compute_ms + w.fixed_ms) / 100.0)))
+
+        def fn(v, _base=w.fn, _reps=reps, _accel=w.accel):
+            op = (lambda: attn(q)) if _accel else (lambda: mm(x))
+            r = op()
+            for _ in range(_reps - 1):
+                r = op()
+            r.block_until_ready()
+            return _base(v) if _base is not None else v
+
+        out.functions[name] = FunctionSpec(
+            name=name, faas=f.faas, failover=f.failover, memory_gb=f.memory_gb,
+            output_store_kind=f.output_store_kind,
+            workload=Workload(compute_ms=w.compute_ms, fixed_ms=w.fixed_ms,
+                              fn=fn, out_bytes=w.out_bytes, accel=w.accel))
+    return out
 
 
 def statemachine_run(spec: WorkflowSpec, cloud: str, n: int = 12, *,

@@ -84,7 +84,7 @@ def _run(mode: str):
         # explicit ids: re-deployments must not restart the id counter
         wfid = f"fo-{mode}-{i:05d}"
         sim.at(t, lambda t0=t, w=wfid: ids.append(
-            (t0, state["dep"].start(1, workflow_id=w, t=t0))))
+            (t0, state["dep"].start(1, workflow_id=w))))
         t += PERIOD_MS
         i += 1
     sim.run(t_max=T_END_MS + 60_000.0)

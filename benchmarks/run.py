@@ -1,17 +1,80 @@
 """Benchmark aggregator — one module per paper table/figure.
 
-Prints a ``name,us_per_call,derived`` CSV line per measurement plus the
-human-readable summaries each module emits.  The §Roofline/§Perf tables read
-``results/dryrun.json`` (produced by ``repro.launch.dryrun --all``).
+    python benchmarks/run.py                      # full sim aggregation
+    python benchmarks/run.py --backend local      # 4 paper workflows on the
+                                                  #   concurrent local backend
+    python benchmarks/run.py --backend local --smoke   # CI gate: one workflow,
+                                                  #   wall budget, zero drops
+
+The default (sim) mode prints a ``name,us_per_call,derived`` CSV line per
+measurement plus the human-readable summaries each module emits; the
+§Roofline/§Perf tables read ``results/dryrun.json`` (produced by
+``repro.launch.dryrun --all``).  The local mode runs the same four paper
+workflows end-to-end on :class:`repro.backends.localjax.LocalRunner` — real
+jitted JAX callables, real thread-level ``Parallel`` fan-out — through the
+identical ``core.workflow.deploy`` path, demonstrating the Backend-Shim's
+portability claim (same artifact, different substrate).
 """
 
 from __future__ import annotations
 
+import argparse
+import math
+import os
 import sys
+import time
 import traceback
 
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_ROOT = os.path.dirname(_HERE)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)      # the 'benchmarks' package (sim aggregation)
+sys.path.insert(0, _HERE)      # bare 'common' (local arm)
 
-def main() -> int:
+LOCAL_WORKFLOWS = ("video4", "qa", "iot8", "mc6")
+SMOKE_WALL_BUDGET_S = 90.0
+
+
+def _local_specs(names):
+    import common
+    builders = {
+        "video4": lambda: common.video_spec(4, "joint"),
+        "qa": lambda: common.qa_spec("joint"),
+        "iot8": lambda: common.iot_spec(8),
+        "mc6": lambda: common.mc_spec(6),
+    }
+    return [(n, builders[n]()) for n in names]
+
+
+def run_local(args) -> int:
+    """All four paper workflows on the concurrent local backend; non-zero
+    exit on drops, non-finite makespans, or (in --smoke) a blown budget."""
+    import common
+    names = LOCAL_WORKFLOWS[:1] if args.smoke else LOCAL_WORKFLOWS
+    n = 1 if args.smoke else args.n
+    failures = 0
+    t0 = time.time()
+    for name, spec in _local_specs(names):
+        ms, runner = common.jointlambda_run_local(
+            spec, n, timeout_s=args.budget_s)
+        drops = runner.drop_count
+        done = sum(1 for m in ms if math.isfinite(m) and m > 0)
+        ok = done == len(ms) and drops == 0
+        failures += 0 if ok else 1
+        print(f"local,{name},p95_ms={common.p95(ms):.1f},"
+              f"runs={done}/{len(ms)},drops={drops},"
+              f"{'ok' if ok else 'FAIL'}")
+    wall = time.time() - t0
+    if args.smoke and wall > args.budget_s:
+        print(f"[smoke] FAIL: wall {wall:.1f}s exceeds budget {args.budget_s:.0f}s")
+        return 1
+    verdict = "OK" if failures == 0 else f"{failures} FAILURES"
+    print(f"local backend {'smoke ' if args.smoke else ''}done in "
+          f"{wall:.1f}s: {verdict}")
+    return 1 if failures else 0
+
+
+def run_sim() -> int:
     failures = 0
     modules = [
         ("fig15 video analytics", "benchmarks.video_analytics"),
@@ -46,6 +109,24 @@ def main() -> int:
         traceback.print_exc()
     print(f"\nbenchmarks done; {failures} module failures")
     return 1 if failures else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--backend", choices=("sim", "local"), default="sim",
+                    help="sim: full figure/table aggregation on SimCloud; "
+                         "local: the 4 paper workflows on the concurrent "
+                         "real-execution backend")
+    ap.add_argument("--smoke", action="store_true",
+                    help="(local) CI gate: one workflow, wall budget, zero drops")
+    ap.add_argument("--n", type=int, default=3,
+                    help="(local) instances per workflow")
+    ap.add_argument("--budget-s", type=float, default=SMOKE_WALL_BUDGET_S,
+                    help="(local) wall-clock budget per run() / smoke total")
+    args = ap.parse_args(argv)
+    if args.backend == "local":
+        return run_local(args)
+    return run_sim()
 
 
 if __name__ == "__main__":

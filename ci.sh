@@ -9,4 +9,7 @@ python -m pytest -x -q "$@"
 if [ "$#" -eq 0 ]; then
     # load-regression gate: bounded wall-clock, zero drops at sub-capacity load
     python benchmarks/throughput_sweep.py --smoke
+    # local-backend gate: one paper workflow end-to-end on the concurrent
+    # real-execution backend (wall budget, zero drops)
+    python benchmarks/run.py --backend local --smoke
 fi

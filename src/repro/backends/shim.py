@@ -6,8 +6,9 @@ invocations, and a backend interpreter executes them.  Two interpreters exist:
 
   * :mod:`repro.backends.simcloud` — deterministic discrete-event Jointcloud
     simulator (virtual clock, latency + billing models, failure injection);
-  * :mod:`repro.backends.localjax` — real in-process execution where workflow
-    nodes are actual (jitted) JAX calls.
+  * :mod:`repro.backends.localjax` — real concurrent in-process execution
+    where workflow nodes are actual (jitted) JAX calls on per-FaaS thread
+    pools.
 
 This mirrors the paper exactly: the orchestration *logic* is cloud-agnostic
 and every cloud interaction goes through the shim's Table-2 API surface:
@@ -19,13 +20,39 @@ and every cloud interaction goes through the shim's Table-2 API surface:
 Effects carry backend *ids* of the form ``"cloud/service"`` (e.g.
 ``"aws/dynamodb"``, ``"aliyun/fc_gpu"``); resolution to a concrete client is
 the interpreter's job — user code and the orchestrator never see cloud SDKs.
+
+The Backend protocol (the invariant new substrates implement)
+-------------------------------------------------------------
+The deploy/runtime layer above the shim (:mod:`repro.core.workflow`) is
+substrate-blind: it talks to any object satisfying the :class:`Backend`
+protocol defined at the bottom of this module.  A new backend (a real AWS
+driver, a Ray cluster, ...) must provide
+
+  1. the **Table-2 execution surface** — ``deploy(Deployment)``,
+     ``submit(faas, function, payload, t=0.0)``, ``run(...)`` — backed by an
+     interpreter for the effect classes below, and
+  2. the **record-query surface** — ``catalog()``, ``executions_of(fn)``,
+     ``completed()``, ``workflow_records(wfid_prefix)`` — over
+     :class:`ExecutionRecord` instances, so ``DeployedWorkflow``'s
+     makespan / result / trace extraction works unchanged.
+
+Optional **capabilities** (``topology``, ``faas`` flavor maps) are *probed*
+by ``DeployedWorkflow.replan()`` with ``getattr`` — a backend that lacks
+them degrades to a :class:`CapabilityError`, never an ``AttributeError``.
+The shared runtime types (:class:`Workload`, :class:`Deployment`,
+:class:`ExecutionRecord`, :class:`Blob`, :func:`estimate_size`) live here so
+neither the generic layer nor a backend has to import another backend.
 """
 
 from __future__ import annotations
 
 import abc
+import math
 from dataclasses import dataclass, field
-from typing import Any, Callable, Generator, Optional, Sequence
+from typing import (Any, Callable, Dict, Generator, List, Mapping, Optional,
+                    Protocol, Sequence, Tuple, runtime_checkable)
+
+from repro.backends import calibration as cal
 
 
 # ==========================================================================
@@ -47,6 +74,13 @@ class DataStoreError(ShimError):
 
 class PayloadTooLarge(ShimError):
     """Direct-transfer payload exceeds the FaaS async quota (§4.3.1)."""
+
+
+class CapabilityError(ShimError):
+    """An optional :class:`Backend` capability (e.g. ``topology``) was
+    requested from a backend that does not provide it.  Raised by the
+    generic layer's capability probes (``DeployedWorkflow.replan()``)
+    instead of letting an ``AttributeError`` escape."""
 
 
 # ==========================================================================
@@ -243,3 +277,249 @@ def faas_id(cloud: str, system: str) -> str:
 
 def cloud_of(backend_id: str) -> str:
     return backend_id.split("/", 1)[0]
+
+
+def build_catalog(stores: Mapping[str, Any], faas: Mapping[str, Any]) -> Any:
+    """Service directory over a substrate's entity maps (Backend protocol's
+    ``catalog()``): first store of each kind per cloud, the tightest payload
+    quota per cloud, and the cheapest-flavor GC host per cloud.  One body so
+    every backend applies identical catalog rules — stores need ``.kind`` /
+    ``.cloud``, FaaS entries ``.cloud`` / ``.payload_quota`` /
+    ``.flavor.price_per_gb_s``."""
+    from repro.core import subgraph as sg   # lazy: core imports backends
+    tables: Dict[str, str] = {}
+    objects: Dict[str, str] = {}
+    quotas: Dict[str, int] = {}
+    gc_faas: Dict[str, str] = {}
+    for did, store in stores.items():
+        target = tables if store.kind == "table" else objects
+        target.setdefault(store.cloud, did)
+    for fid, f in faas.items():
+        quotas.setdefault(f.cloud, f.payload_quota)
+        quotas[f.cloud] = min(quotas[f.cloud], f.payload_quota)
+        # GC prefers the cheapest (CPU) flavor in each cloud
+        cur = gc_faas.get(f.cloud)
+        if cur is None or f.flavor.price_per_gb_s < faas[cur].flavor.price_per_gb_s:
+            gc_faas[f.cloud] = fid
+    return sg.Catalog(tables, objects, quotas, gc_faas)
+
+
+# ==========================================================================
+# Shared runtime types — backend-agnostic, consumed by every interpreter
+# (SimCloud re-exports them for backward compatibility)
+# ==========================================================================
+
+
+@dataclass(frozen=True)
+class Blob:
+    """Opaque data of a known size (video chunk, tensor, document...).
+
+    Workloads pass Blobs around so egress/quota accounting sees realistic
+    byte counts without materializing data.
+    """
+
+    nbytes: int
+    tag: str = ""
+
+    def __repr__(self) -> str:  # keep repr small: Blob is sized explicitly
+        return f"Blob({self.nbytes}b,{self.tag})"
+
+
+# Container sizes are memoized by identity with a top-level ``len`` guard:
+# stored lists may grow via append (len changes ⇒ recompute) but must not be
+# structurally resized at constant length — the only such pattern in the
+# repo, bitmap bit flips, is size-neutral (bool stays 5 bytes).  Entries keep
+# a strong reference to the container so ids cannot be recycled while cached;
+# the table is cleared wholesale when it fills.
+_SIZE_MEMO: Dict[int, Tuple[Any, int, int]] = {}
+_SIZE_MEMO_MAX = 1 << 16
+
+
+def estimate_size(obj: Any) -> int:
+    """Rough wire size of a payload value, honoring explicit Blob sizes."""
+    t = obj.__class__
+    if t is Blob:
+        return obj.nbytes
+    if t is bytes:
+        return len(obj)
+    if t is str:
+        # UTF-8 length; the ascii flag is O(1) and covers nearly every key
+        return len(obj) if obj.isascii() else len(obj.encode())
+    if t is bool:
+        return 5
+    if t is int or t is float:
+        return 8
+    if obj is None:
+        return 4
+    if t is dict or t is list or t is tuple:
+        key = id(obj)
+        hit = _SIZE_MEMO.get(key)
+        if hit is not None and hit[0] is obj and hit[1] == len(obj):
+            return hit[2]
+        if t is dict:
+            size = 2
+            for k, v in obj.items():
+                size += estimate_size(k) + estimate_size(v) + 2
+        else:
+            size = 2
+            for v in obj:
+                size += estimate_size(v) + 1
+        if len(_SIZE_MEMO) >= _SIZE_MEMO_MAX:
+            _SIZE_MEMO.clear()
+        _SIZE_MEMO[key] = (obj, len(obj), size)
+        return size
+    # rare subclassed/odd types: original isinstance-chain semantics
+    if isinstance(obj, Blob):
+        return obj.nbytes
+    if isinstance(obj, bytes):
+        return len(obj)
+    if isinstance(obj, str):
+        return len(obj.encode())
+    if isinstance(obj, bool):
+        return 5
+    if isinstance(obj, (int, float)):
+        return 8
+    if isinstance(obj, dict):
+        return 2 + sum(estimate_size(k) + estimate_size(v) + 2 for k, v in obj.items())
+    if isinstance(obj, (list, tuple)):
+        return 2 + sum(estimate_size(v) + 1 for v in obj)
+    return len(repr(obj))
+
+
+@dataclass
+class Workload:
+    """Reference duration model for a workflow node's user function.
+
+    ``compute_ms`` scales with the flavor speed (Fig 1 heterogeneity);
+    ``fixed_ms`` does not (I/O, (de)serialization).  ``fn`` produces the
+    value-level output; if omitted the input is forwarded.
+
+    ``accel`` marks GPU-amenable compute (BERT/ResNet class): on a GPU
+    flavor a non-accel stage runs at CPU-reference speed — video splitting
+    does not get 15× faster by renting a GPU.  ``out_bytes`` is a static
+    hint of the output's wire size, consumed by the placement planner
+    (runtime sizing still uses the actual value via ``estimate_size``).
+
+    Interpreters use the two halves differently: SimCloud advances virtual
+    time by ``duration_ms`` and calls ``fn`` for the value; the local
+    backend runs ``fn`` for real and measures wall-clock.
+    """
+
+    compute_ms: float = 0.0
+    fixed_ms: float = 0.0
+    fn: Optional[Callable[[Any], Any]] = None
+    out_bytes: Optional[int] = None
+    accel: bool = True
+
+    def duration_ms(self, flavor: cal.Flavor) -> float:
+        speed = 1.0 if (flavor.gpu and not self.accel) else flavor.speed
+        return self.compute_ms / max(speed, 1e-9) + self.fixed_ms
+
+    def output(self, data: Any) -> Any:
+        return self.fn(data) if self.fn is not None else data
+
+
+@dataclass
+class Deployment:
+    """A function deployed on one FaaS system."""
+
+    function: str
+    faas: str                                  # "cloud/system"
+    handler: Callable[[Any], Generator]        # event -> effect generator
+    workload: Workload = field(default_factory=Workload)
+    memory_gb: Optional[float] = None          # default: flavor memory
+    max_retries: int = cal.MAX_RETRIES
+
+
+@dataclass
+class ExecutionRecord:
+    """One attempt of a deployed function, as every backend reports it.
+
+    ``status`` ∈ queued|running|done|crashed|aborted|dropped — ``dropped``
+    marks an invocation abandoned after the substrate's retry budget was
+    exhausted (it must be *recorded*, never silently discarded)."""
+
+    exec_id: int
+    function: str
+    faas: str
+    t_queued: float
+    t_start: float = math.nan
+    t_end: float = math.nan
+    status: str = "queued"
+    attempt: int = 0
+    payload: Any = None
+    result: Any = None
+    phases: List[Tuple[float, str]] = field(default_factory=list)
+
+    def phase_breakdown(self) -> Dict[str, float]:
+        """Per-phase elapsed time (Fig-20-style decomposition)."""
+        out: Dict[str, float] = {}
+        marks = self.phases + [(self.t_end, "_end")]
+        for (t0, name), (t1, _) in zip(marks, marks[1:]):
+            out[name] = out.get(name, 0.0) + (t1 - t0)
+        return out
+
+
+# ==========================================================================
+# The Backend protocol — what repro.core.workflow deploys onto
+# ==========================================================================
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """Structural contract every workflow substrate implements.
+
+    ``repro.core.workflow.deploy`` / :class:`DeployedWorkflow` only ever
+    call this surface, so the same workflow artifact runs unchanged on any
+    implementation (SimCloud, LocalRunner, a future real-cloud driver).
+
+    **Execution surface**
+
+    * ``deploy(dep)`` — register a :class:`Deployment` under
+      ``(dep.faas, dep.function)`` in ``deployments``.
+    * ``submit(faas, function, payload, t=0.0)`` — external async-invoke.
+      ``t`` is a *delay in milliseconds* relative to the backend's clock
+      (virtual time on SimCloud, wall-clock on the local runner).  A backend
+      that cannot schedule into the future MUST either honor the delay or
+      reject a non-zero ``t`` loudly — silently ignoring it is a bug.
+    * ``run(...)`` — drive the substrate until quiescent (no queued or
+      in-flight work).  Backend-specific limits (virtual-time horizon,
+      wall-clock timeout) are keyword arguments.
+
+    **Record-query surface** (serves indexes, never record scans)
+
+    * ``catalog()`` — the :class:`repro.core.subgraph.Catalog` describing
+      this substrate's stores/quotas/GC hosts; the single input the
+      sub-graph compiler needs.
+    * ``executions_of(function)`` — all attempts of one function.
+    * ``completed()`` — all ``done`` records, in completion order keyed by
+      ``exec_id``.
+    * ``workflow_records(prefix)`` — all records whose workflow id starts
+      with ``prefix`` (``-batchN`` spin-offs included), by ``exec_id``.
+    * ``dropped`` — invocations abandoned after the retry budget; an empty
+      list on a healthy run.
+
+    **Optional capabilities** — probed via ``getattr``, never assumed:
+    ``topology`` (a :class:`repro.core.costmodel.Topology`) and ``faas``
+    (a mapping ``faas_id -> object`` with ``.flavor``/``.cloud``) enable
+    ``DeployedWorkflow.replan()``/``learn_profiles()``; backends without
+    them get a :class:`CapabilityError` instead of an ``AttributeError``.
+    """
+
+    deployments: Dict[Tuple[str, str], Deployment]
+    dropped: List[Any]
+
+    def deploy(self, dep: Deployment) -> None: ...
+
+    def submit(self, faas: str, function: str, payload: Any,
+               t: float = 0.0) -> None: ...
+
+    def run(self, *args: Any, **kwargs: Any) -> Any: ...
+
+    def catalog(self) -> Any: ...
+
+    def executions_of(self, function: str) -> List[ExecutionRecord]: ...
+
+    def completed(self) -> List[ExecutionRecord]: ...
+
+    def workflow_records(self, prefix: str) -> List[ExecutionRecord]: ...

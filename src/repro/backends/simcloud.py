@@ -67,86 +67,11 @@ from repro.backends.billing import Bill
 from repro.backends.datastore import TableState
 
 
-# ==========================================================================
-# Payload sizing
-# ==========================================================================
-
-
-@dataclass(frozen=True)
-class Blob:
-    """Opaque data of a known size (video chunk, tensor, document...).
-
-    Workloads pass Blobs around so egress/quota accounting sees realistic
-    byte counts without materializing data.
-    """
-
-    nbytes: int
-    tag: str = ""
-
-    def __repr__(self) -> str:  # keep repr small: Blob is sized explicitly
-        return f"Blob({self.nbytes}b,{self.tag})"
-
-
-# Container sizes are memoized by identity with a top-level ``len`` guard:
-# stored lists may grow via append (len changes ⇒ recompute) but must not be
-# structurally resized at constant length — the only such pattern in the
-# repo, bitmap bit flips, is size-neutral (bool stays 5 bytes).  Entries keep
-# a strong reference to the container so ids cannot be recycled while cached;
-# the table is cleared wholesale when it fills.
-_SIZE_MEMO: Dict[int, Tuple[Any, int, int]] = {}
-_SIZE_MEMO_MAX = 1 << 16
-
-
-def estimate_size(obj: Any) -> int:
-    """Rough wire size of a payload value, honoring explicit Blob sizes."""
-    t = obj.__class__
-    if t is Blob:
-        return obj.nbytes
-    if t is bytes:
-        return len(obj)
-    if t is str:
-        # UTF-8 length; the ascii flag is O(1) and covers nearly every key
-        return len(obj) if obj.isascii() else len(obj.encode())
-    if t is bool:
-        return 5
-    if t is int or t is float:
-        return 8
-    if obj is None:
-        return 4
-    if t is dict or t is list or t is tuple:
-        key = id(obj)
-        hit = _SIZE_MEMO.get(key)
-        if hit is not None and hit[0] is obj and hit[1] == len(obj):
-            return hit[2]
-        if t is dict:
-            size = 2
-            for k, v in obj.items():
-                size += estimate_size(k) + estimate_size(v) + 2
-        else:
-            size = 2
-            for v in obj:
-                size += estimate_size(v) + 1
-        if len(_SIZE_MEMO) >= _SIZE_MEMO_MAX:
-            _SIZE_MEMO.clear()
-        _SIZE_MEMO[key] = (obj, len(obj), size)
-        return size
-    # rare subclassed/odd types: original isinstance-chain semantics
-    if isinstance(obj, Blob):
-        return obj.nbytes
-    if isinstance(obj, bytes):
-        return len(obj)
-    if isinstance(obj, str):
-        return len(obj.encode())
-    if isinstance(obj, bool):
-        return 5
-    if isinstance(obj, (int, float)):
-        return 8
-    if isinstance(obj, dict):
-        return 2 + sum(estimate_size(k) + estimate_size(v) + 2 for k, v in obj.items())
-    if isinstance(obj, (list, tuple)):
-        return 2 + sum(estimate_size(v) + 1 for v in obj)
-    return len(repr(obj))
-
+# Shared runtime types live in the shim (backend-agnostic); re-exported here
+# because SimCloud was their historical home and most callers import them
+# from this module.
+from repro.backends.shim import (Blob, Deployment, ExecutionRecord,  # noqa: F401
+                                 Workload, estimate_size)
 
 # ==========================================================================
 # Static entities
@@ -208,75 +133,6 @@ class DataStoreService:
 
     def write_ms(self) -> float:
         return cal.TABLE_WRITE_MS if self.kind == "table" else cal.OBJECT_WRITE_MS
-
-
-@dataclass
-class Workload:
-    """Reference duration model for a workflow node's user function.
-
-    ``compute_ms`` scales with the flavor speed (Fig 1 heterogeneity);
-    ``fixed_ms`` does not (I/O, (de)serialization).  ``fn`` produces the
-    value-level output; if omitted the input is forwarded.
-
-    ``accel`` marks GPU-amenable compute (BERT/ResNet class): on a GPU
-    flavor a non-accel stage runs at CPU-reference speed — video splitting
-    does not get 15× faster by renting a GPU.  ``out_bytes`` is a static
-    hint of the output's wire size, consumed by the placement planner
-    (runtime sizing still uses the actual value via ``estimate_size``).
-    """
-
-    compute_ms: float = 0.0
-    fixed_ms: float = 0.0
-    fn: Optional[Callable[[Any], Any]] = None
-    out_bytes: Optional[int] = None
-    accel: bool = True
-
-    def duration_ms(self, flavor: cal.Flavor) -> float:
-        speed = 1.0 if (flavor.gpu and not self.accel) else flavor.speed
-        return self.compute_ms / max(speed, 1e-9) + self.fixed_ms
-
-    def output(self, data: Any) -> Any:
-        return self.fn(data) if self.fn is not None else data
-
-
-@dataclass
-class Deployment:
-    """A function deployed on one FaaS system."""
-
-    function: str
-    faas: str                                  # "cloud/system"
-    handler: Callable[[Any], Generator]        # event -> effect generator
-    workload: Workload = field(default_factory=Workload)
-    memory_gb: Optional[float] = None          # default: flavor memory
-    max_retries: int = cal.MAX_RETRIES
-
-
-# ==========================================================================
-# Runtime records
-# ==========================================================================
-
-
-@dataclass
-class ExecutionRecord:
-    exec_id: int
-    function: str
-    faas: str
-    t_queued: float
-    t_start: float = math.nan
-    t_end: float = math.nan
-    status: str = "queued"       # queued|running|done|crashed|aborted
-    attempt: int = 0
-    payload: Any = None
-    result: Any = None
-    phases: List[Tuple[float, str]] = field(default_factory=list)
-
-    def phase_breakdown(self) -> Dict[str, float]:
-        """Per-phase elapsed time (Fig-20-style decomposition)."""
-        out: Dict[str, float] = {}
-        marks = self.phases + [(self.t_end, "_end")]
-        for (t0, name), (t1, _) in zip(marks, marks[1:]):
-            out[name] = out.get(name, 0.0) + (t1 - t0)
-        return out
 
 
 class Execution:
@@ -521,14 +377,24 @@ class SimCloud:
 
     # ---- deployment & invocation ----------------------------------------------
 
+    def catalog(self):
+        """Service directory of this simulated substrate (Backend protocol),
+        with the same catalog rules as every backend (``shim.build_catalog``)."""
+        return shim.build_catalog(self.stores, self.faas)
+
     def deploy(self, dep: Deployment) -> None:
         if dep.faas not in self.faas:
             raise KeyError(f"unknown FaaS system {dep.faas}")
         self.deployments[(dep.faas, dep.function)] = dep
 
     def submit(self, faas: str, function: str, payload: Any, t: float = 0.0) -> None:
-        """External client async-invokes ``function`` at virtual time ``t``."""
-        self.at(t, self._enqueue, faas, function, payload, 0)
+        """External client async-invokes ``function`` after a delay of ``t``
+        virtual ms (the Backend-protocol contract — before the first ``run``
+        the clock is 0, so the delay doubles as an absolute arrival time).
+        Negative delays are rejected loudly, never clamped."""
+        if t < 0:
+            raise ValueError(f"submit delay t={t} ms must be >= 0")
+        self.after(t, self._enqueue, faas, function, payload, 0)
 
     def at(self, t: float, fn: Callable[..., None], *args: Any) -> None:
         if t < self.now:

@@ -9,4 +9,4 @@ from repro.core.subgraph import (  # noqa: F401
 from repro.core.jlobject import JLObject  # noqa: F401
 from repro.core.naming import Control, collaboration_key  # noqa: F401
 from repro.core.orchestrator import gc_handler, handle, make_handler  # noqa: F401
-from repro.core.workflow import DeployedWorkflow, catalog_from_simcloud, deploy  # noqa: F401
+from repro.core.workflow import DeployedWorkflow, deploy  # noqa: F401

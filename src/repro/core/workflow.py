@@ -1,10 +1,18 @@
-"""Deploy compiled workflows onto a backend and launch instances.
+"""Deploy compiled workflows onto any Backend and launch instances.
 
 ``deploy`` compiles the WorkflowSpec into per-function NodeViews, then
 registers one deployment per (function × FaaS system) — primaries *and*
 pre-deployed failover backups share the same NodeView, because checkpoint
 keys must be attempt-location-independent (§4.2).  A GC function is deployed
 once per cloud (§4.4).
+
+This layer is **substrate-blind**: it only calls the
+:class:`repro.backends.shim.Backend` protocol surface (``deploy`` /
+``submit`` / ``catalog`` / the record-query methods), so the same workflow
+artifact deploys unchanged on SimCloud, the concurrent local runner, or any
+future backend.  Optional capabilities (``topology``, ``faas`` flavors) are
+probed with ``getattr`` — never assumed — and their absence surfaces as a
+:class:`repro.backends.shim.CapabilityError`.
 """
 
 from __future__ import annotations
@@ -14,38 +22,25 @@ from dataclasses import dataclass
 from typing import Any, Dict, Optional
 
 from repro.backends import shim
-from repro.backends.simcloud import Deployment, SimCloud, Workload
+from repro.backends.shim import Backend, Deployment, Workload
 from repro.core import orchestrator as orch
 from repro.core import subgraph as sg
-
-
-def catalog_from_simcloud(sim: SimCloud) -> sg.Catalog:
-    tables: Dict[str, str] = {}
-    objects: Dict[str, str] = {}
-    quotas: Dict[str, int] = {}
-    gc_faas: Dict[str, str] = {}
-    for did, store in sim.stores.items():
-        target = tables if store.kind == "table" else objects
-        target.setdefault(store.cloud, did)
-    for fid, f in sim.faas.items():
-        quotas.setdefault(f.cloud, f.payload_quota)
-        quotas[f.cloud] = min(quotas[f.cloud], f.payload_quota)
-        # GC prefers the cheapest (CPU) flavor in each cloud
-        cur = gc_faas.get(f.cloud)
-        if cur is None or f.flavor.price_per_gb_s < sim.faas[cur].flavor.price_per_gb_s:
-            gc_faas[f.cloud] = fid
-    return sg.Catalog(tables, objects, quotas, gc_faas)
 
 
 @dataclass
 class DeployedWorkflow:
     spec: sg.WorkflowSpec
     views: Dict[str, sg.NodeView]
-    sim: SimCloud
+    backend: Backend
     _ids: itertools.count = None  # type: ignore[assignment]
 
     def __post_init__(self):
         self._ids = itertools.count()
+
+    @property
+    def sim(self) -> Backend:
+        """Legacy alias from when SimCloud was the only substrate."""
+        return self.backend
 
     @property
     def entry(self) -> sg.NodeView:
@@ -54,19 +49,20 @@ class DeployedWorkflow:
 
     def start(self, input_value: Any = None, *, workflow_id: Optional[str] = None,
               t: float = 0.0) -> str:
-        """Async-invoke the entry function at virtual time ``t``."""
+        """Async-invoke the entry function after a delay of ``t`` ms
+        (virtual time on SimCloud, wall-clock on the local runner)."""
         wfid = workflow_id or f"{self.spec.name}-{next(self._ids):06d}"
-        self.sim.submit(self.entry.faas, self.entry.name,
-                        {"workflow_id": wfid, "input": input_value}, t=t)
+        self.backend.submit(self.entry.faas, self.entry.name,
+                            {"workflow_id": wfid, "input": input_value}, t=t)
         return wfid
 
     # ---- result extraction -------------------------------------------------
 
     def executions(self, workflow_id: str):
         """All execution records belonging to one workflow instance
-        (including ``-batchN`` spin-offs) — served from SimCloud's sorted
+        (including ``-batchN`` spin-offs) — served from the backend's
         workflow-id index, not a scan over every record."""
-        return self.sim.workflow_records(str(workflow_id))
+        return self.backend.workflow_records(str(workflow_id))
 
     def makespan_ms(self, workflow_id: str, *, include_gc: bool = False) -> float:
         recs = [r for r in self.executions(workflow_id)
@@ -84,12 +80,22 @@ class DeployedWorkflow:
 
     # ---- runtime re-planning (outage-aware, trace-calibrated) --------------
 
+    def _capability(self, name: str, *, why: str) -> Any:
+        value = getattr(self.backend, name, None)
+        if not value:
+            raise shim.CapabilityError(
+                f"{type(self.backend).__name__} provides no '{name}' "
+                f"capability, required to {why} (see the Backend protocol "
+                f"in repro.backends.shim)")
+        return value
+
     def learn_profiles(self):
-        """Trace-calibrated workload profiles from this sim's completed
+        """Trace-calibrated workload profiles from this backend's completed
         executions (``EdgeProfiles.from_records``) — the pilot-run feedback
         the planner consumes via ``plan_workflow(profiles=...)``."""
         from repro.core.costmodel import EdgeProfiles
-        return EdgeProfiles.from_records(self.sim)
+        self._capability("faas", why="map records onto flavors")
+        return EdgeProfiles.from_records(self.backend)
 
     def replan(self, *, excluded_clouds: Any = (), objective: str = "makespan",
                weight: Any = None, flavors: Any = None, profiles: Any = None,
@@ -103,35 +109,45 @@ class DeployedWorkflow:
         with ranked failover orders, replaces the deployments in place.
         In-flight instances are unaffected: checkpoint keys are
         attempt-location-independent, so they complete under either
-        placement.  Returns the re-deployed workflow (same sim).
+        placement.  Returns the re-deployed workflow (same backend).
+
+        Requires the optional ``topology`` and ``faas`` capabilities: on a
+        backend without a network model (e.g. the local runner) this raises
+        a clear :class:`repro.backends.shim.CapabilityError` instead of
+        re-planning over a substrate it cannot cost.
         """
         from repro.core import placement
+        topology = self._capability(
+            "topology", why="cost candidate placements for replan()")
+        faas_map = self._capability(
+            "faas", why="enumerate candidate flavors for replan()")
         if profiles is None:
             profiles = self.learn_profiles()
         if flavors is None:
-            # candidates must mirror the sim's *actual* substrate — the
+            # candidates must mirror the backend's *actual* substrate — the
             # global default config may lack clouds this jointcloud has
             # (and the excluded-cloud filter would then fall back to pins
             # on the very cloud being excluded)
-            flavors = {fid: f.flavor for fid, f in self.sim.faas.items()}
+            flavors = {fid: f.flavor for fid, f in faas_map.items()}
         plan = placement.plan_workflow(
             self.spec, flavors, objective=objective, weight=weight,
             profiles=profiles, candidates=candidates,
             excluded_clouds=tuple(excluded_clouds),
-            topology=self.sim.topology, with_failover=True)
-        return deploy(self.sim, self.spec, plan=plan)
+            topology=topology, with_failover=True)
+        return deploy(self.backend, self.spec, plan=plan)
 
 
-def deploy(sim: SimCloud, spec: sg.WorkflowSpec,
+def deploy(backend: Backend, spec: sg.WorkflowSpec,
            catalog: Optional[sg.Catalog] = None, *,
            plan: Any = None) -> DeployedWorkflow:
-    """Compile and deploy ``spec``.  ``plan`` — a ``placement.PlacementPlan``
-    (or any object with ``.overrides()``) — re-places the workflow's nodes
-    before compilation; the returned DeployedWorkflow carries the re-placed
-    spec so makespan/bill queries see the effective placement."""
+    """Compile and deploy ``spec`` onto any Backend-protocol substrate.
+    ``plan`` — a ``placement.PlacementPlan`` (or any object with
+    ``.overrides()``) — re-places the workflow's nodes before compilation;
+    the returned DeployedWorkflow carries the re-placed spec so
+    makespan/bill queries see the effective placement."""
     if plan is not None:
         spec = sg.apply_placement(spec, plan.overrides())
-    catalog = catalog or catalog_from_simcloud(sim)
+    catalog = catalog or backend.catalog()
     views = sg.compile_workflow(spec, catalog)
     # ByRedundant replicas are additional deployment targets of the dst fn
     replica_targets: dict = {}
@@ -144,11 +160,11 @@ def deploy(sim: SimCloud, spec: sg.WorkflowSpec,
         workload = f.workload if isinstance(f.workload, Workload) else Workload(fn=f.workload)
         targets = {view.faas, *view.failover, *replica_targets.get(name, ())}
         for faas in sorted(targets):
-            sim.deploy(Deployment(
+            backend.deploy(Deployment(
                 function=name, faas=faas, handler=orch.make_handler(view),
                 workload=workload, memory_gb=f.memory_gb))
     for cloud, faas in catalog.gc_faas.items():
-        if (faas, sg.GC_FUNCTION) not in sim.deployments:
-            sim.deploy(Deployment(function=sg.GC_FUNCTION, faas=faas,
-                                  handler=orch.gc_handler, workload=Workload()))
-    return DeployedWorkflow(spec, views, sim)
+        if (faas, sg.GC_FUNCTION) not in backend.deployments:
+            backend.deploy(Deployment(function=sg.GC_FUNCTION, faas=faas,
+                                      handler=orch.gc_handler, workload=Workload()))
+    return DeployedWorkflow(spec, views, backend)

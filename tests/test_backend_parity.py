@@ -1,0 +1,212 @@
+"""Unified Backend API: the same WorkflowSpec deploys through the one
+``core.workflow.deploy`` path on SimCloud *and* the concurrent LocalRunner,
+and produces the same execution sets and results — semantic parity, not
+timing parity (the Backend-Shim portability claim, paper §3.2 / Table 2).
+"""
+
+import math
+from collections import Counter
+
+import pytest
+
+from repro.backends import shim
+from repro.backends.localjax import LocalRunner, deploy_local
+from repro.backends.simcloud import SimCloud, Workload
+from repro.core import workflow as wf
+from repro.core.subgraph import WorkflowSpec
+
+AWS = "aws/lambda"
+ALI = "aliyun/fc"
+
+
+# ---- workflow zoo (one builder per invocation-primitive family) -------------
+
+
+def seq_spec():
+    spec = WorkflowSpec("p-seq", gc=True)
+    spec.function("a", AWS, workload=Workload(fn=lambda x: x + 1))
+    spec.function("b", ALI, workload=Workload(fn=lambda x: x * 2))
+    spec.sequence("a", "b")
+    return spec, 3, "b", 8
+
+
+def diamond_spec():
+    spec = WorkflowSpec("p-diamond", gc=False)
+    spec.function("a", AWS, workload=Workload(fn=lambda x: x))
+    for i, f in enumerate(["b", "c", "d"]):
+        spec.function(f, ALI if i % 2 else AWS,
+                      workload=Workload(fn=lambda x, i=i: x + i))
+    spec.function("agg", ALI, workload=Workload(fn=lambda xs: sorted(xs)))
+    spec.fanout("a", ["b", "c", "d"])
+    spec.fanin(["b", "c", "d"], "agg")
+    return spec, 10, "agg", [10, 11, 12]
+
+
+def map_spec():
+    spec = WorkflowSpec("p-map", gc=False)
+    spec.function("split", AWS, workload=Workload(fn=lambda n: list(range(n))))
+    spec.function("work", ALI, workload=Workload(fn=lambda x: x * x))
+    spec.function("agg", AWS, workload=Workload(fn=sum))
+    spec.map("split", "work")
+    spec.fanin(["work"], "agg")
+    return spec, 6, "agg", sum(i * i for i in range(6))
+
+
+def loop_spec():
+    spec = WorkflowSpec("p-loop", gc=False)
+    spec.function("inc", AWS, workload=Workload(fn=lambda x: x + 1))
+    spec.function("even", ALI, workload=Workload(fn=lambda x: ("even", x)))
+    spec.function("odd", ALI, workload=Workload(fn=lambda x: ("odd", x)))
+    spec.cycle("inc", "inc", while_pred=lambda x: x < 5)
+    spec.choice("inc", [(lambda x: x % 2 == 0, "even"), (None, "odd")])
+    return spec, 0, "odd", ("odd", 5)
+
+
+def redundant_spec():
+    spec = WorkflowSpec("p-red", gc=False)
+    spec.function("a", AWS, workload=Workload(fn=lambda x: x))
+    spec.function("b", ALI, workload=Workload(fn=lambda x: x * 10))
+    spec.function("c", AWS, workload=Workload(fn=lambda x: x))
+    spec.redundant("a", "b", replicas=[ALI, AWS])
+    spec.sequence("b", "c")
+    return spec, 4, "c", 40
+
+
+CASES = {
+    "sequence": seq_spec,
+    "diamond": diamond_spec,
+    "map": map_spec,
+    "cycle_choice": loop_spec,
+    "redundant": redundant_spec,
+}
+
+
+def _run_on(kind: str, build):
+    spec, input_value, terminal, expected = build()
+    backend = SimCloud(seed=0) if kind == "sim" else LocalRunner()
+    dep = wf.deploy(backend, spec)
+    wid = dep.start(input_value)
+    if kind == "sim":
+        backend.run()
+    else:
+        backend.run(timeout_s=60.0)
+    done = Counter(r.function for r in dep.executions(wid)
+                   if r.status == "done")
+    return {
+        "backend": backend,
+        "dep": dep,
+        "wid": wid,
+        "done": done,
+        "result": dep.result_of(wid, terminal),
+        "expected": expected,
+        "makespan": dep.makespan_ms(wid),
+    }
+
+
+# ---- the parity suite ------------------------------------------------------
+
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_same_spec_same_semantics_on_both_backends(case):
+    sim = _run_on("sim", CASES[case])
+    loc = _run_on("local", CASES[case])
+    # identical execution sets (which functions completed, how many times)
+    assert sim["done"] == loc["done"], (sim["done"], loc["done"])
+    # identical terminal values through result_of
+    assert sim["result"] == sim["expected"]
+    assert loc["result"] == loc["expected"]
+    # finite makespans on both substrates (virtual vs wall — only finiteness
+    # and positivity are comparable)
+    assert math.isfinite(sim["makespan"]) and sim["makespan"] > 0
+    assert math.isfinite(loc["makespan"]) and loc["makespan"] > 0
+    # zero drops on a healthy run, both sides
+    assert not sim["backend"].dropped
+    assert not loc["backend"].dropped
+
+
+def test_both_backends_satisfy_the_protocol():
+    assert isinstance(SimCloud(), shim.Backend)
+    assert isinstance(LocalRunner(), shim.Backend)
+
+
+def test_catalogs_agree_on_substrate_shape():
+    """Both backends derive their Catalog from the same config, including
+    the cheapest-flavor GC-host rule."""
+    sim_cat = SimCloud().catalog()
+    loc_cat = LocalRunner().catalog()
+    assert sim_cat.tables == loc_cat.tables
+    assert sim_cat.objects == loc_cat.objects
+    assert sim_cat.quotas == loc_cat.quotas
+    assert sim_cat.gc_faas == loc_cat.gc_faas
+
+
+def test_deploy_local_is_a_thin_alias_of_unified_deploy():
+    """deploy_local must route through core.workflow.deploy and return a
+    fully-functional DeployedWorkflow (executions / makespan_ms /
+    result_of all work on the LocalRunner deployment)."""
+    spec, input_value, terminal, expected = seq_spec()
+    runner = LocalRunner()
+    dep = deploy_local(runner, spec)
+    assert isinstance(dep, wf.DeployedWorkflow)
+    assert dep.backend is runner
+    wid = dep.start(input_value)
+    runner.run(timeout_s=60.0)
+    assert dep.result_of(wid, terminal) == expected
+    assert math.isfinite(dep.makespan_ms(wid))
+    assert {r.function for r in dep.executions(wid)
+            if r.status == "done"} == {"a", "b"}
+
+
+def test_record_query_surface_parity():
+    """executions_of / completed serve the same views on both backends."""
+    for kind in ("sim", "local"):
+        out = _run_on(kind, map_spec)
+        backend = out["backend"]
+        works = backend.executions_of("work")
+        assert len([r for r in works if r.status == "done"]) == 6
+        completed = backend.completed()
+        assert [r.exec_id for r in completed] == sorted(
+            r.exec_id for r in completed)
+        assert {r.function for r in completed} >= {"split", "work", "agg"}
+
+
+def test_replan_degrades_gracefully_without_topology():
+    """A backend without a network model must yield a clear CapabilityError
+    from replan(), never an AttributeError (the capability-probe rule)."""
+    spec, input_value, terminal, _ = seq_spec()
+    runner = LocalRunner()
+    dep = wf.deploy(runner, spec)
+    wid = dep.start(input_value)
+    runner.run(timeout_s=60.0)
+    with pytest.raises(shim.CapabilityError, match="topology"):
+        dep.replan(excluded_clouds=["aliyun"])
+    # ... and the deployment keeps serving results after the refused replan
+    assert dep.result_of(wid, terminal) is not None
+
+
+def test_submit_delay_contract_on_both_backends():
+    """submit(t=) is a *delay* on every backend (virtual ms on SimCloud,
+    wall ms on LocalRunner): honored relative to the backend's clock, and
+    negative values rejected loudly — never clamped or ignored."""
+    spec, input_value, terminal, expected = seq_spec()
+    sim = SimCloud(seed=0)
+    dep = wf.deploy(sim, spec)
+    w0 = dep.start(input_value)
+    sim.run()
+    t_mid = sim.now
+    w1 = dep.start(input_value, t=250.0)          # delay from now, not t=250 absolute
+    sim.run()
+    assert dep.result_of(w1, terminal) == expected
+    first = min(r.t_queued for r in dep.executions(w1))
+    assert first >= t_mid + 250.0
+    with pytest.raises(ValueError):
+        sim.submit(AWS, "a", {"workflow_id": "neg", "input": 0}, t=-1.0)
+
+
+def test_learn_profiles_works_on_local_records():
+    """The trace-calibration loop is backend-agnostic: wall-clock local
+    records feed EdgeProfiles just like virtual-clock SimCloud ones."""
+    out = _run_on("local", seq_spec)
+    profiles = out["dep"].learn_profiles()
+    assert profiles.nodes["a"].samples >= 1
+    assert profiles.nodes["b"].out_bytes > 0

@@ -1,0 +1,347 @@
+"""Concurrent exactly-once on the real-execution backend (paper §4.1 under
+*real* thread races), complementing the SimCloud-only crash-schedule suites
+in ``tests/test_exactly_once.py``: FaaS systems are killed mid-fan-out on
+live worker pools, duplicate attempts race on actual threads, and the
+linearizable store absorbs them — plus the substrate-level guarantees the
+new LocalRunner adds (overlapping fan-out execution, honored submit delays,
+dropped-invocation traces, per-key-locked store atomicity).
+"""
+
+import threading
+import time
+
+import pytest
+
+from repro.backends import shim
+from repro.backends.datastore import TableState
+from repro.backends.localjax import LocalRunner, LockedTableState
+from repro.backends.simcloud import Workload
+from repro.core import workflow as wf
+from repro.core.subgraph import WorkflowSpec
+
+AWS = "aws/lambda"
+ALI = "aliyun/fc"
+
+SLEEP_S = 0.15
+
+
+def _overlap_pairs(recs):
+    """Number of record pairs whose [t_start, t_end] windows overlap."""
+    n = 0
+    for i, a in enumerate(recs):
+        for b in recs[i + 1:]:
+            if a.t_start < b.t_end and b.t_start < a.t_end:
+                n += 1
+    return n
+
+
+# ---- real concurrency ------------------------------------------------------
+
+
+def test_fanout_executes_with_overlapping_wall_clock_windows():
+    """The §4.1.2 fan-out runs on real threads: sibling branch executions
+    overlap in wall-clock time instead of running back-to-back."""
+    k = 4
+    spec = WorkflowSpec("conc", gc=False)
+    spec.function("src", AWS, workload=Workload(fn=lambda x: x))
+    for i in range(k):
+        spec.function(f"w{i}", ALI,
+                      workload=Workload(fn=lambda x: time.sleep(SLEEP_S) or x))
+    spec.fanout("src", [f"w{i}" for i in range(k)])
+    runner = LocalRunner(concurrency=8)
+    dep = wf.deploy(runner, spec)
+    wid = dep.start(0)
+    runner.run(timeout_s=60.0)
+    ws = [r for r in dep.executions(wid)
+          if r.function.startswith("w") and r.status == "done"]
+    assert len(ws) == k
+    # sequential execution would give zero overlapping pairs and a makespan
+    # ≥ k × SLEEP; concurrent slots give overlap and a near-1× makespan
+    assert _overlap_pairs(ws) >= 2
+    assert dep.makespan_ms(wid) < (k - 1) * SLEEP_S * 1e3
+
+
+def test_parallel_effect_subeffects_run_concurrently():
+    """A Parallel effect's sub-effects fan out on threads: total elapsed is
+    ~max of the children, not their sum."""
+    runner = LocalRunner()
+
+    class _Ex:
+        record = shim.ExecutionRecord(0, "x", AWS, 0.0)
+        dep = shim.Deployment("x", AWS, handler=lambda e: iter(()),
+                              workload=Workload(fn=lambda v: time.sleep(SLEEP_S) or v))
+
+    t0 = time.monotonic()
+    out = runner._apply(_Ex(), shim.Parallel([shim.RunUser(i) for i in range(6)]))
+    elapsed = time.monotonic() - t0
+    assert out == list(range(6))
+    assert elapsed < 3 * SLEEP_S
+
+
+# ---- exactly-once under mid-flight kills ----------------------------------
+
+
+def _effectful_spec(fanout):
+    """a → map(w × fanout) → agg → tail, side-effect-counting (the same
+    shape as the SimCloud crash-schedule suite)."""
+    lock = threading.Lock()
+    calls = {"w": [], "tail": []}
+
+    def w_fn(x):
+        time.sleep(0.08)
+        with lock:
+            calls["w"].append(x)
+        return x + 1
+
+    def tail_fn(x):
+        with lock:
+            calls["tail"].append(x)
+        return x
+
+    spec = WorkflowSpec("kill", gc=False)
+    spec.function("a", AWS, workload=Workload(fn=lambda x: list(range(fanout))))
+    spec.function("w", ALI, workload=Workload(fn=w_fn))
+    spec.function("agg", AWS, workload=Workload(fn=lambda xs: sum(xs)))
+    spec.function("tail", ALI, failover=[AWS], workload=Workload(fn=tail_fn))
+    spec.map("a", "w")
+    spec.fanin(["w"], "agg")
+    spec.sequence("agg", "tail")
+    return spec, calls, fanout * (fanout + 1) // 2
+
+
+def _single_valued_outputs(runner, fn_name):
+    """All committed output checkpoints of one logical function name."""
+    outs = []
+    for store in runner.stores.values():
+        for key in list(store.state.items):
+            if f"/{fn_name}_" in key and key.endswith("-output"):
+                outs.append(store.get(key))
+    return outs
+
+
+def test_kill_faas_mid_fanout_exactly_once():
+    """Kill the FaaS hosting the fan-out workers while they are mid-flight
+    (real outage: in-flight attempts aborted at their next effect boundary),
+    bring it back, and assert exactly-once semantics survived the races."""
+    fanout = 6
+    spec, calls, expected = _effectful_spec(fanout)
+    runner = LocalRunner(concurrency=8, max_requeues=40, retry_backoff_ms=15.0)
+    dep = wf.deploy(runner, spec)
+
+    down = threading.Timer(0.04, runner.set_down, args=(ALI,),
+                           kwargs={"kill_running": True})
+    up = threading.Timer(0.45, runner.set_down, args=(ALI, False))
+    down.start(), up.start()
+    wid = dep.start(0)
+    runner.run(timeout_s=60.0)
+
+    assert not runner.dropped, runner.dropped
+    # the workflow completed and every completed tail saw the same value
+    tails = [r for r in dep.executions(wid)
+             if r.function == "tail" and r.status == "done"]
+    assert tails and all(r.result == expected for r in tails)
+    assert expected in calls["tail"]
+    # at-most-once data production: agg committed exactly one output even if
+    # duplicate attempts raced
+    agg_outputs = _single_valued_outputs(runner, "agg")
+    assert agg_outputs == [{"v": expected}]
+    # each map branch committed exactly one output value (duplicates of the
+    # *execution* are allowed — crashed attempts re-ran — but the workflow
+    # data is single-valued per function id)
+    w_outputs = _single_valued_outputs(runner, "w")
+    assert sorted(o["v"] for o in w_outputs) == list(range(1, fanout + 1))
+    # the outage actually interrupted something: crashed attempts exist
+    crashed = [r for r in runner.records if r.status == "crashed"]
+    assert crashed, "outage window produced no interrupted attempts"
+
+
+def test_threaded_extreme_duplicate_invocation():
+    """§4.1.2 'most extreme scenario' on real threads: crash the parent
+    between the async invoke and its invocation checkpoint ⇒ the successor
+    runs twice, concurrently, and the duplicates collapse on the store."""
+    lock = threading.Lock()
+    seen = []
+    spec = WorkflowSpec("dup", gc=False)
+    spec.function("a", AWS, workload=Workload(fn=lambda x: x + 1))
+    spec.function("b", ALI, workload=Workload(
+        fn=lambda x: (time.sleep(0.02), lock.__enter__(),
+                      seen.append(x), lock.__exit__(None, None, None))[2] or x * 2))
+    spec.sequence("a", "b")
+    runner = LocalRunner(retry_backoff_ms=5.0)
+    dep = wf.deploy(runner, spec)
+
+    state = {"armed": True}
+    guard = threading.Lock()
+
+    def crash(ex, effect):
+        with guard:
+            if state["armed"] and ex.dep.function == "a" \
+                    and isinstance(effect, shim.DsAppendGetList) \
+                    and effect.key.endswith("-ivk"):
+                state["armed"] = False
+                return True
+        return False
+
+    runner.crash_policy = crash
+    wid = dep.start(1)
+    runner.run(timeout_s=60.0)
+    runner.crash_policy = None
+
+    bs = [r for r in dep.executions(wid) if r.function == "b"
+          and r.status == "done"]
+    assert len(bs) >= 2, "retry must re-invoke b (duplicate invocation)"
+    assert all(r.result == 4 for r in bs)
+    assert _single_valued_outputs(runner, "b") == [{"v": 4}]
+
+
+def test_no_duplicate_successor_invocations_without_crashes():
+    """Under a clean concurrent run the invocation checkpoints admit exactly
+    one successor invocation per edge: no function executes twice."""
+    fanout = 8
+    spec, calls, expected = _effectful_spec(fanout)
+    runner = LocalRunner(concurrency=16)
+    dep = wf.deploy(runner, spec)
+    wid = dep.start(0)
+    runner.run(timeout_s=60.0)
+    done = [r for r in dep.executions(wid) if r.status == "done"]
+    per_fn = {}
+    for r in done:
+        per_fn[r.function] = per_fn.get(r.function, 0) + 1
+    assert per_fn == {"a": 1, "w": fanout, "agg": 1, "tail": 1}
+    assert sorted(calls["w"]) == list(range(fanout))
+    assert calls["tail"] == [expected]
+
+
+# ---- substrate guarantees --------------------------------------------------
+
+
+def test_exhausted_requeues_record_dropped_trace():
+    """Work abandoned after the requeue budget must leave a 'dropped'
+    ExecutionRecord and a surfaced count — never vanish silently."""
+    spec = WorkflowSpec("drop", gc=False)
+    spec.function("b", ALI, workload=Workload(fn=lambda x: x))
+    runner = LocalRunner(max_requeues=3, retry_backoff_ms=2.0)
+    wf.deploy(runner, spec)
+    runner.set_down(ALI)
+    runner.submit(ALI, "b", {"workflow_id": "wdrop-1", "input": 0})
+    runner.run(timeout_s=30.0)
+    assert runner.drop_count == 1
+    assert runner.dropped[0][:2] == (ALI, "b")
+    recs = runner.workflow_records("wdrop-1")
+    assert [r.status for r in recs].count("dropped") == 1
+    assert [r.status for r in recs].count("crashed") == 1 + 3  # initial + requeues
+
+
+def test_submit_delay_is_honored():
+    """The Backend-protocol contract: submit(t=...) delays enqueue by t ms
+    of wall-clock — it is not silently ignored."""
+    spec = WorkflowSpec("delay", gc=False)
+    spec.function("f", AWS, workload=Workload(fn=lambda x: x))
+    runner = LocalRunner()
+    dep = wf.deploy(runner, spec)
+    w0 = dep.start(0, t=0.0)
+    w1 = dep.start(1, t=150.0)
+    runner.run(timeout_s=30.0)
+    r0 = runner.workflow_records(w0)[0]
+    r1 = runner.workflow_records(w1)[0]
+    assert r1.t_queued - r0.t_queued >= 100.0
+    with pytest.raises(ValueError):
+        runner.submit(AWS, "f", {"workflow_id": "neg", "input": 0}, t=-1.0)
+
+
+def test_user_code_error_surfaces_from_run():
+    """A non-Shim exception in user code is not a substrate fault: no
+    redelivery, no silent hang — run() re-raises the original error (and
+    the attempt is recorded as crashed)."""
+    spec = WorkflowSpec("boom", gc=False)
+    spec.function("f", AWS, workload=Workload(
+        fn=lambda x: (_ for _ in ()).throw(ValueError("user bug"))))
+    runner = LocalRunner()
+    dep = wf.deploy(runner, spec)
+    wid = dep.start(0)
+    with pytest.raises(ValueError, match="user bug"):
+        runner.run(timeout_s=10.0)
+    recs = runner.workflow_records(wid)
+    assert [r.status for r in recs] == ["crashed"]
+
+
+def test_parallel_subthread_error_propagates():
+    """A non-Shim failure in a threaded Parallel sub-effect must surface on
+    the calling thread, not silently become a None sub-result."""
+    runner = LocalRunner()
+
+    def fn(v):
+        if v == 1:
+            raise KeyError("sub bug")
+        return v
+
+    class _Ex:
+        record = shim.ExecutionRecord(0, "x", AWS, 0.0)
+        dep = shim.Deployment("x", AWS, handler=lambda e: iter(()),
+                              workload=Workload(fn=fn))
+
+    with pytest.raises(KeyError):
+        runner._apply(_Ex(), shim.Parallel([shim.RunUser(0), shim.RunUser(1)]))
+
+
+def test_locked_store_is_linearizable_under_contention():
+    st = LockedTableState(TableState("t"), "aws")
+
+    # conditional create: exactly one winner among racing threads
+    wins = []
+    lock = threading.Lock()
+
+    def create(i):
+        ok = st.create_if_absent("k", i)
+        with lock:
+            wins.append((i, ok))
+
+    threads = [threading.Thread(target=create, args=(i,)) for i in range(16)]
+    [t.start() for t in threads]
+    [t.join() for t in threads]
+    assert sum(1 for _, ok in wins if ok) == 1
+
+    # atomic append: no lost updates across racing appenders
+    def append(i):
+        for j in range(50):
+            st.append_and_get_list("lst", [i * 1000 + j])
+
+    threads = [threading.Thread(target=append, args=(i,)) for i in range(8)]
+    [t.start() for t in threads]
+    [t.join() for t in threads]
+    final = st.get("lst")
+    assert len(final) == 8 * 50 and len(set(final)) == 8 * 50
+
+    # atomic bitmap: every racing bit-set lands
+    st.create_if_absent("bm", [False] * 64)
+    threads = [threading.Thread(target=st.update_bitmap, args=(i, "bm"))
+               for i in range(64)]
+    [t.start() for t in threads]
+    [t.join() for t in threads]
+    assert all(st.get("bm"))
+
+
+def test_redundant_replicas_race_concurrently_first_wins():
+    """ByRedundant on the local backend races real threads on two FaaS
+    systems; the §4.1 conditional create picks one winner and downstream
+    executes once."""
+    spec = WorkflowSpec("race", gc=False)
+    spec.function("a", AWS, workload=Workload(fn=lambda x: x))
+    spec.function("b", ALI, workload=Workload(
+        fn=lambda x: time.sleep(0.05) or x * 10))
+    spec.function("c", AWS, workload=Workload(fn=lambda x: x))
+    spec.redundant("a", "b", replicas=[ALI, AWS])
+    spec.sequence("b", "c")
+    runner = LocalRunner()
+    dep = wf.deploy(runner, spec)
+    wid = dep.start(4)
+    runner.run(timeout_s=60.0)
+    bs = [r for r in dep.executions(wid) if r.function == "b"
+          and r.status == "done"]
+    assert len(bs) == 2 and {r.faas for r in bs} == {ALI, AWS}
+    # the two replicas genuinely raced (overlapping windows)
+    assert _overlap_pairs(bs) == 1
+    cs = [r for r in dep.executions(wid) if r.function == "c"
+          and r.status == "done"]
+    assert len(cs) == 1 and cs[0].result == 40
+    assert _single_valued_outputs(runner, "b") == [{"v": 40}]

@@ -215,7 +215,7 @@ def test_replan_uses_sim_substrate_not_default_config():
     assert dep.result_of(w0, "qa") == "42"
     dep2 = dep.replan(excluded_clouds=("aliyun", "aws"))
     assert {shim.cloud_of(v.faas) for v in dep2.views.values()} == {"gcp"}
-    w1 = dep2.start(0, workflow_id="replanned-ext-000", t=sim.now + 1.0)
+    w1 = dep2.start(0, workflow_id="replanned-ext-000", t=1.0)
     sim.run()
     assert dep2.result_of(w1, "qa") == "42"
 
@@ -232,7 +232,7 @@ def test_deployed_workflow_replan_avoids_excluded_cloud():
     dep2 = dep.replan(excluded_clouds=("aliyun",))
     assert all(shim.cloud_of(v.faas) != "aliyun" for v in dep2.views.values())
     sim.schedule_outage("aliyun", sim.now, sim.now + 1e9)
-    w1 = dep2.start(0, workflow_id="replanned-000", t=sim.now + 1.0)
+    w1 = dep2.start(0, workflow_id="replanned-000", t=1.0)
     sim.run()
     assert dep2.result_of(w1, "qa") == "42"
 

@@ -159,7 +159,7 @@ def test_no_global_graph_at_runtime():
     spec.function("b", ALI, workload=Workload(fn=lambda x: x))
     spec.sequence("a", "b")
     sim = SimCloud()
-    views = compile_workflow(spec, wf.catalog_from_simcloud(sim))
+    views = compile_workflow(spec, sim.catalog())
     import repro.core.subgraph as sg
     for v in views.values():
         for info in v.next_funcs:
