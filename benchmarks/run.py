@@ -5,6 +5,9 @@
                                                   #   concurrent local backend
     python benchmarks/run.py --backend local --smoke   # CI gate: one workflow,
                                                   #   wall budget, zero drops
+    python benchmarks/run.py --backend local --open-loop [--smoke]
+                                                  # Poisson arrivals on the
+                                                  #   local backend, wall-clock
 
 The default (sim) mode prints a ``name,us_per_call,derived`` CSV line per
 measurement plus the human-readable summaries each module emits; the
@@ -14,6 +17,14 @@ workflows end-to-end on :class:`repro.backends.localjax.LocalRunner` — real
 jitted JAX callables, real thread-level ``Parallel`` fan-out — through the
 identical ``core.workflow.deploy`` path, demonstrating the Backend-Shim's
 portability claim (same artifact, different substrate).
+
+The open-loop mode (``--backend local --open-loop``) is the throughput
+sweep's traffic model on the *real* concurrent executor: the same
+:mod:`repro.core.traffic` Poisson schedules the sim consumes in virtual
+time are submitted here through the identical ``submit(t=)`` contract and
+honored as wall-clock delays — overlapping workflow instances contend on
+real threads.  Its ``--smoke`` variant is a CI gate: all arrivals must
+complete with zero drops inside a wall budget.
 """
 
 from __future__ import annotations
@@ -33,6 +44,13 @@ sys.path.insert(0, _HERE)      # bare 'common' (local arm)
 
 LOCAL_WORKFLOWS = ("video4", "qa", "iot8", "mc6")
 SMOKE_WALL_BUDGET_S = 90.0
+
+# Open-loop local traffic: modest defaults — the point is overlapping
+# real-thread instances, not saturation (wall-clock arrivals make big n slow).
+OPEN_LOOP_MIX = ("qa", "iot8")
+OPEN_LOOP_RATE_WF_S = 6.0
+OPEN_LOOP_ARRIVALS = 18
+OPEN_LOOP_SEED = 7
 
 
 def _local_specs(names):
@@ -72,6 +90,48 @@ def run_local(args) -> int:
     print(f"local backend {'smoke ' if args.smoke else ''}done in "
           f"{wall:.1f}s: {verdict}")
     return 1 if failures else 0
+
+
+def run_local_open_loop(args) -> int:
+    """Open-loop Poisson traffic on the concurrent local backend: one
+    shared :class:`LocalRunner`, a round-robin mix of paper workflows, and
+    a :class:`repro.core.traffic.PoissonProcess` schedule whose submit
+    delays the backend honors in wall-clock time.  Non-zero exit on drops,
+    incomplete workflows, or (``--smoke``) a blown wall budget."""
+    import common
+    from repro.backends.localjax import LocalRunner
+    from repro.core import traffic
+    from repro.core import workflow as wf
+
+    rate = args.rate
+    n = OPEN_LOOP_ARRIVALS if args.smoke else args.arrivals
+    t0 = time.time()
+    runner = LocalRunner(concurrency=8)
+    deps = [wf.deploy(runner, common.localize_spec(spec))
+            for _, spec in _local_specs(OPEN_LOOP_MIX)]
+    schedule = traffic.PoissonProcess(rate, seed=OPEN_LOOP_SEED).schedule(
+        n, streams=len(deps))
+    load = traffic.LoadRunner(deps, input_value=0)
+    load.submit(schedule)
+    load.drain(timeout_s=args.budget_s)
+    point = load.collect()
+    wall = time.time() - t0
+    ok = point.completed == n and point.dropped == 0
+    print(f"local open-loop: {n} arrivals @ {rate:.1f} wf/s over "
+          f"{'/'.join(OPEN_LOOP_MIX)}: completed={point.completed}/{n} "
+          f"dropped={point.dropped} p50={point.p50_ms:.0f}ms "
+          f"p99={point.p99_ms:.0f}ms wall={wall:.1f}s")
+    if args.smoke and wall > args.budget_s:
+        print(f"[smoke] FAIL: wall {wall:.1f}s exceeds budget "
+              f"{args.budget_s:.0f}s")
+        return 1
+    if not ok:
+        print(f"[{'smoke' if args.smoke else 'open-loop'}] FAIL: "
+              f"incomplete workflows or drops")
+        return 1
+    print(f"local open-loop {'smoke ' if args.smoke else ''}OK: "
+          f"zero drops, all arrivals completed")
+    return 0
 
 
 def run_sim() -> int:
@@ -123,9 +183,21 @@ def main(argv=None) -> int:
                     help="(local) instances per workflow")
     ap.add_argument("--budget-s", type=float, default=SMOKE_WALL_BUDGET_S,
                     help="(local) wall-clock budget per run() / smoke total")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="(local) Poisson arrivals in wall-clock time "
+                         "through the shared traffic subsystem")
+    ap.add_argument("--rate", type=float, default=OPEN_LOOP_RATE_WF_S,
+                    help="(local --open-loop) offered load in workflows/sec")
+    ap.add_argument("--arrivals", type=int, default=OPEN_LOOP_ARRIVALS,
+                    help="(local --open-loop) total arrivals")
     args = ap.parse_args(argv)
     if args.backend == "local":
+        if args.open_loop:
+            return run_local_open_loop(args)
         return run_local(args)
+    if args.open_loop:
+        ap.error("--open-loop requires --backend local (the sim arm lives "
+                 "in benchmarks/throughput_sweep.py)")
     return run_sim()
 
 

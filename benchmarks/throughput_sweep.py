@@ -13,6 +13,12 @@ at swept rates against a contended jointcloud substrate:
   * per-cloud FaaS concurrency slots with a cold-start penalty on slot
     mint (``SimCloud(concurrency=..., cold_start_ms=...)``).
 
+Traffic generation and measurement ride on the backend-agnostic
+:mod:`repro.core.traffic` subsystem (``PoissonProcess`` → ``LoadRunner``):
+the schedules here are the same RNG arithmetic and submit order the sweep
+has always used, so the refactor reproduces the published numbers
+bit-for-bit (``tests/test_traffic.py`` pins an anchor point).
+
 Per sweep point the harness reports simulated workflows/sec, engine
 events/sec wall-clock (the load-regression number — compare against the
 ``engine_baseline`` block of ``BENCH_throughput.json``), and p50/p99
@@ -21,12 +27,22 @@ cross-cloud traffic fits the pair capacity, then a hockey-stick once it
 exceeds it (the contention model's signature).
 
     PYTHONPATH=src python benchmarks/throughput_sweep.py \
-        [--rates 10,30,...] [--n 10000] [--out BENCH_throughput.json] [--smoke]
+        [--rates 10,30,...] [--n 10000] [--out BENCH_throughput.json] \
+        [--smoke] [--drift]
 
 ``--smoke`` is the CI gate: one fixed sub-capacity point (500 workflows at
 30 wf/s) under a wall-clock budget — exits non-zero on any dropped
 workflow, any incomplete workflow, or a budget overrun (i.e. an engine
 perf regression of roughly an order of magnitude).
+
+``--drift`` is the online-re-planning arm: a 3-stage QA service whose mid
+stage starts emitting 100× bigger outputs mid-run (live traffic no longer
+matches the plan-time hints).  The *static* arm keeps the original
+placement and pays the drifted payload cross-cloud on every workflow; the
+*adaptive* arm runs a :class:`repro.core.traffic.OnlineReplanner` (drift
+detector over live ``EdgeProfiles`` windows → ``replan(profiles=...)``)
+and re-places the drifted stage next to its consumer.  Exits non-zero
+unless adaptive strictly beats static on post-drift p50.
 """
 
 from __future__ import annotations
@@ -34,7 +50,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import random
 import statistics
 import sys
 import time
@@ -43,8 +58,10 @@ sys.path.insert(0, "src")
 sys.path.insert(0, os.path.dirname(__file__))
 
 from repro.backends import calibration as cal
-from repro.backends.simcloud import SimCloud
+from repro.backends.simcloud import SimCloud, Workload
+from repro.core import traffic
 from repro.core import workflow as wf
+from repro.core.subgraph import WorkflowSpec
 
 import common
 
@@ -66,6 +83,14 @@ SMOKE_WALL_BUDGET_S = 120.0
 SIM_SEED = 42
 ARRIVAL_SEED = 123
 
+# Drift arm: a 3-stage QA service under moderate load; the sort stage's
+# output grows 100× at DRIFT_AT_MS (plan-time hint: 40 KB).
+DRIFT_RATE = 10.0
+DRIFT_N = 800
+DRIFT_AT_MS = 30_000.0
+DRIFT_BYTES = 4_000_000
+DRIFT_SETTLE_MS = 6_000.0      # detector window + re-plan propagation
+
 # Measured once on the pre-rework engine (commit 0c8ff56) at the engine
 # point below (same mix, arrivals, seeds, scale; uncontended substrate) —
 # the perf-trajectory anchor future sweeps compare against.
@@ -82,7 +107,8 @@ def build_specs():
 
 
 def run_point(rate_wf_s: float, n: int, *, contended: bool = True) -> dict:
-    """One open-loop sweep point: ``n`` Poisson arrivals at ``rate_wf_s``.
+    """One open-loop sweep point: ``n`` Poisson arrivals at ``rate_wf_s``,
+    generated and measured by :mod:`repro.core.traffic`.
 
     Two wall-clock figures come out: ``events_per_s_engine`` (the event loop
     alone) and ``events_per_s`` (event loop *plus* per-workflow makespan
@@ -96,34 +122,30 @@ def run_point(rate_wf_s: float, n: int, *, contended: bool = True) -> dict:
     else:
         sim = SimCloud(seed=SIM_SEED)   # pre-rework-comparable substrate
     deps = [wf.deploy(sim, spec) for spec in build_specs()]
-    arrivals = random.Random(ARRIVAL_SEED)
-    t = 0.0
-    ids = []
-    for i in range(n):
-        t += arrivals.expovariate(rate_wf_s) * 1000.0
-        dep = deps[i % len(deps)]
-        ids.append((dep, dep.start(0, t=t)))
+    schedule = traffic.PoissonProcess(rate_wf_s, seed=ARRIVAL_SEED).schedule(
+        n, streams=len(deps))
+    runner = traffic.LoadRunner(deps, input_value=0)
+    runner.submit(schedule)
     wall0 = time.perf_counter()
-    sim.run()
+    runner.drain()
     engine_wall = time.perf_counter() - wall0
     wall1 = time.perf_counter()
-    makespans = sorted(m for dep, wid in ids
-                       for m in (dep.makespan_ms(wid),) if m == m)
+    point = runner.collect()
     report_wall = time.perf_counter() - wall1
-    k = len(makespans)
     total_wall = engine_wall + report_wall
     cold = sum(f.cold_starts for f in sim.faas.values())
     return {
         "rate_wf_s": rate_wf_s,
         "n": n,
         "contended": contended,
-        "completed": k,
-        "dropped": len(sim.dropped),
-        "p50_ms": round(makespans[k // 2], 1) if k else None,
-        "p99_ms": round(makespans[min(k - 1, int(round(0.99 * (k - 1))))], 1) if k else None,
-        "mean_ms": round(statistics.fmean(makespans), 1) if k else None,
+        "completed": point.completed,
+        "dropped": point.dropped,
+        "p50_ms": round(point.p50_ms, 1) if point.p50_ms is not None else None,
+        "p99_ms": round(point.p99_ms, 1) if point.p99_ms is not None else None,
+        "mean_ms": round(point.mean_ms, 1) if point.mean_ms is not None else None,
         "sim_duration_s": round(sim.now / 1000.0, 1),
-        "sim_wf_per_s": round(k / (sim.now / 1000.0), 2) if sim.now else None,
+        "sim_wf_per_s": round(point.completed / (sim.now / 1000.0), 2)
+            if sim.now else None,
         "events": sim.events_processed,
         "engine_wall_s": round(engine_wall, 2),
         "report_wall_s": round(report_wall, 2),
@@ -134,6 +156,105 @@ def run_point(rate_wf_s: float, n: int, *, contended: bool = True) -> dict:
         "egress_mb_per_wf": round(sim.bill.counters["egress_bytes"] / n / 1e6, 3),
         "cold_starts": cold,
     }
+
+
+# ==========================================================================
+# Drift arm — profile-driven online re-planning vs a static plan
+# ==========================================================================
+
+
+def drift_spec() -> WorkflowSpec:
+    """ingest (entry, AWS) → sort (AWS) → qa (AliYun GPU).
+
+    The entry stays pinned (clients address it); ``sort`` is the stage whose
+    output drifts — initially 40 KB (so co-placing it with ingest on AWS is
+    right), post-drift 4 MB (so it belongs next to ``qa`` on AliYun)."""
+    spec = WorkflowSpec("qadrift", gc=False)
+    spec.function("ingest", common.AWS_CPU, workload=Workload(
+        fixed_ms=5.0, accel=False, out_bytes=common.QA_DOC.nbytes,
+        fn=lambda x: common.QA_DOC))
+    spec.function("sort", common.AWS_CPU, workload=Workload(
+        compute_ms=common.QA_SORT_MS, accel=False,
+        out_bytes=common.QA_DOC.nbytes, fn=lambda x: common.QA_DOC))
+    spec.function("qa", common.ALI_GPU, memory_gb=8.0, workload=Workload(
+        compute_ms=common.QA_BERT_MS, out_bytes=64,
+        fn=lambda x: {"answers": 4}))
+    spec.sequence("ingest", "sort")
+    spec.sequence("sort", "qa")
+    return spec
+
+
+def drift_point(adaptive: bool, *, rate_wf_s: float = DRIFT_RATE,
+                n: int = DRIFT_N) -> dict:
+    """One drift run: Poisson arrivals of the QA service; at ``DRIFT_AT_MS``
+    the sort stage starts emitting ``DRIFT_BYTES`` outputs.  ``adaptive``
+    arms an :class:`~repro.core.traffic.OnlineReplanner` in virtual time."""
+    sim = SimCloud(cal.contended_jointcloud(), seed=SIM_SEED)
+    dep = wf.deploy(sim, drift_spec())
+    sim.at(DRIFT_AT_MS, traffic.inject_output_drift, sim, "sort", DRIFT_BYTES)
+    replanner = None
+    if adaptive:
+        replanner = traffic.OnlineReplanner(
+            dep, traffic.DriftDetector.from_spec(dep.spec),
+            interval_ms=2000.0, cooldown_ms=4000.0)
+        replanner.install()
+    schedule = traffic.PoissonProcess(rate_wf_s, seed=ARRIVAL_SEED).schedule(n)
+    runner = traffic.LoadRunner([dep], input_value=0)
+    started = runner.submit(schedule)
+    runner.drain()
+    point = runner.collect()
+
+    # split per-arrival makespans around the drift (post excludes the
+    # detection/re-plan settle window so both arms compare steady states)
+    pre, post = [], []
+    for arrival, (d, wid) in zip(schedule, started):
+        m = d.makespan_ms(wid)
+        if m != m:
+            continue
+        if arrival.t_ms < DRIFT_AT_MS:
+            pre.append(m)
+        elif arrival.t_ms >= DRIFT_AT_MS + DRIFT_SETTLE_MS:
+            post.append(m)
+    pre.sort()
+    post.sort()
+    return {
+        "arm": "adaptive" if adaptive else "static",
+        "rate_wf_s": rate_wf_s, "n": n,
+        "drift_at_ms": DRIFT_AT_MS, "drift_bytes": DRIFT_BYTES,
+        "completed": point.completed, "dropped": point.dropped,
+        "pre_p50_ms": round(traffic.percentile(pre, 0.5), 1) if pre else None,
+        "post_p50_ms": round(traffic.percentile(post, 0.5), 1) if post else None,
+        "post_p99_ms": round(traffic.percentile(post, 0.99), 1) if post else None,
+        "post_mean_ms": round(statistics.fmean(post), 1) if post else None,
+        "replans": len(replanner.replans) if replanner else 0,
+    }
+
+
+def run_drift(verbose: bool = True) -> dict:
+    """Static vs adaptive under injected profile drift.  Returns both arms
+    plus the verdict; adaptive must strictly beat static post-drift."""
+    static = drift_point(adaptive=False)
+    adaptive = drift_point(adaptive=True)
+    ok = (adaptive["post_p50_ms"] is not None
+          and static["post_p50_ms"] is not None
+          and adaptive["post_p50_ms"] < static["post_p50_ms"]
+          and adaptive["replans"] >= 1
+          and adaptive["dropped"] == 0)
+    if verbose:
+        print(f"[drift] pre-drift p50: static {static['pre_p50_ms']} ms, "
+              f"adaptive {adaptive['pre_p50_ms']} ms (same plan)")
+        print(f"[drift] post-drift p50: static {static['post_p50_ms']} ms vs "
+              f"adaptive {adaptive['post_p50_ms']} ms "
+              f"({adaptive['replans']} re-plan(s)) → "
+              f"{'OK' if ok else 'FAIL'}")
+        print(f"[drift] post-drift p99: static {static['post_p99_ms']} ms vs "
+              f"adaptive {adaptive['post_p99_ms']} ms")
+    return {"static": static, "adaptive": adaptive, "adaptive_beats_static": ok}
+
+
+# ==========================================================================
+# CI gate and CLI
+# ==========================================================================
 
 
 def smoke() -> int:
@@ -173,9 +294,15 @@ def main() -> int:
     ap.add_argument("--out", default="BENCH_throughput.json")
     ap.add_argument("--smoke", action="store_true",
                     help="CI gate: one bounded sub-capacity point")
+    ap.add_argument("--drift", action="store_true",
+                    help="only the online-re-planning drift arm "
+                         "(static vs adaptive; non-zero exit unless "
+                         "adaptive wins post-drift)")
     args = ap.parse_args()
     if args.smoke:
         return smoke()
+    if args.drift:
+        return 0 if run_drift()["adaptive_beats_static"] else 1
 
     rates = [float(r) for r in args.rates.split(",") if r]
     substrate = {
@@ -213,6 +340,9 @@ def main() -> int:
               f"{ep['events_per_s_engine'] / base['events_per_s_engine']:.1f}× "
               f"engine-only, {ep['events_per_s'] / base['events_per_s']:.1f}× "
               f"for the whole sweep point (engine + reporting)")
+
+    # online re-planning under injected profile drift (static vs adaptive)
+    results["drift"] = run_drift()
 
     # capacity-crossing estimate from measured per-workflow traffic
     mbit_per_wf = results["sweep"][0]["egress_mb_per_wf"] * 8

@@ -7,9 +7,14 @@ cd "$(dirname "$0")"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q "$@"
 if [ "$#" -eq 0 ]; then
+    # docs-that-execute gate: the README's quickstart must stay green
+    python examples/quickstart.py
     # load-regression gate: bounded wall-clock, zero drops at sub-capacity load
     python benchmarks/throughput_sweep.py --smoke
     # local-backend gate: one paper workflow end-to-end on the concurrent
     # real-execution backend (wall budget, zero drops)
     python benchmarks/run.py --backend local --smoke
+    # open-loop local gate: Poisson arrivals honored as wall-clock submit
+    # delays on the concurrent backend (zero drops, all arrivals complete)
+    python benchmarks/run.py --backend local --open-loop --smoke
 fi

@@ -32,9 +32,12 @@ driver, a Ray cluster, ...) must provide
      ``submit(faas, function, payload, t=0.0)``, ``run(...)`` — backed by an
      interpreter for the effect classes below, and
   2. the **record-query surface** — ``catalog()``, ``executions_of(fn)``,
-     ``completed()``, ``workflow_records(wfid_prefix)`` — over
+     ``completed()``, ``workflow_records(wfid_prefix)``, ``dropped`` — over
      :class:`ExecutionRecord` instances, so ``DeployedWorkflow``'s
      makespan / result / trace extraction works unchanged.
+
+The full authoring guide (semantics, capability table, checklist) is
+``docs/backends.md``.
 
 Optional **capabilities** (``topology``, ``faas`` flavor maps) are *probed*
 by ``DeployedWorkflow.replan()`` with ``getattr`` — a backend that lacks
@@ -268,14 +271,17 @@ class FaaSBackend(abc.ABC):
 
 
 def ds_id(cloud: str, store: str) -> str:
+    """Canonical datastore backend id, e.g. ``ds_id("aws", "dynamodb")``."""
     return f"{cloud}/{store}"
 
 
 def faas_id(cloud: str, system: str) -> str:
+    """Canonical FaaS backend id, e.g. ``faas_id("aliyun", "fc_gpu")``."""
     return f"{cloud}/{system}"
 
 
 def cloud_of(backend_id: str) -> str:
+    """The cloud part of a ``"cloud/service"`` backend id."""
     return backend_id.split("/", 1)[0]
 
 
@@ -412,10 +418,15 @@ class Workload:
     accel: bool = True
 
     def duration_ms(self, flavor: cal.Flavor) -> float:
+        """Reference duration on ``flavor``: the compute half scales with
+        flavor speed (GPU speedup only for ``accel`` work), the fixed half
+        does not."""
         speed = 1.0 if (flavor.gpu and not self.accel) else flavor.speed
         return self.compute_ms / max(speed, 1e-9) + self.fixed_ms
 
     def output(self, data: Any) -> Any:
+        """Value-level output of the user function (input forwarded when no
+        ``fn`` is declared)."""
         return self.fn(data) if self.fn is not None else data
 
 
@@ -492,8 +503,7 @@ class Backend(Protocol):
       this substrate's stores/quotas/GC hosts; the single input the
       sub-graph compiler needs.
     * ``executions_of(function)`` — all attempts of one function.
-    * ``completed()`` — all ``done`` records, in completion order keyed by
-      ``exec_id``.
+    * ``completed()`` — all ``done`` records, sorted by ``exec_id``.
     * ``workflow_records(prefix)`` — all records whose workflow id starts
       with ``prefix`` (``-batchN`` spin-offs included), by ``exec_id``.
     * ``dropped`` — invocations abandoned after the retry budget; an empty
@@ -509,17 +519,37 @@ class Backend(Protocol):
     deployments: Dict[Tuple[str, str], Deployment]
     dropped: List[Any]
 
-    def deploy(self, dep: Deployment) -> None: ...
+    def deploy(self, dep: Deployment) -> None:
+        """Register ``dep`` under ``(dep.faas, dep.function)``; re-deploying
+        the same key replaces it (how re-planning swaps placements in)."""
+        ...
 
     def submit(self, faas: str, function: str, payload: Any,
-               t: float = 0.0) -> None: ...
+               t: float = 0.0) -> None:
+        """External async-invoke after a delay of ``t`` ms relative to this
+        backend's clock.  Honor the delay or reject non-zero ``t`` loudly;
+        negative ``t`` is always a ``ValueError``."""
+        ...
 
-    def run(self, *args: Any, **kwargs: Any) -> Any: ...
+    def run(self, *args: Any, **kwargs: Any) -> Any:
+        """Drive the substrate until quiescent; limits (``t_max=``,
+        ``timeout_s=``) are backend-specific keywords."""
+        ...
 
-    def catalog(self) -> Any: ...
+    def catalog(self) -> Any:
+        """This substrate's service directory (``subgraph.Catalog``); build
+        it with :func:`build_catalog` for uniform rules."""
+        ...
 
-    def executions_of(self, function: str) -> List[ExecutionRecord]: ...
+    def executions_of(self, function: str) -> List[ExecutionRecord]:
+        """All attempts of one function, from an index (never a scan)."""
+        ...
 
-    def completed(self) -> List[ExecutionRecord]: ...
+    def completed(self) -> List[ExecutionRecord]:
+        """All ``done`` records, sorted by ``exec_id``."""
+        ...
 
-    def workflow_records(self, prefix: str) -> List[ExecutionRecord]: ...
+    def workflow_records(self, prefix: str) -> List[ExecutionRecord]:
+        """All records whose workflow id starts with ``prefix``
+        (``-batchN`` spin-offs included), sorted by ``exec_id``."""
+        ...

@@ -130,6 +130,8 @@ class Topology:
     # ---- lookups (symmetric, with N≥3 fallback rules) ---------------------
 
     def rtt_ms(self, a: str, b: str) -> float:
+        """Round-trip latency a↔b (symmetric; region-based fallback for
+        pairs the config did not pin)."""
         if a == b:
             return self.intra_rtt_ms
         base = self.rtt_table.get(_pair(a, b))
@@ -140,11 +142,13 @@ class Topology:
         return base
 
     def bandwidth_gbps(self, a: str, b: str) -> float:
+        """Per-flow a↔b throughput in **Gbit/s** (VPC-class intra-cloud)."""
         if a == b:
             return self.intra_bandwidth_gbps
         return self.bandwidth_table.get(_pair(a, b), self.default_bandwidth_gbps)
 
     def egress_price_per_gb(self, cloud: str) -> float:
+        """$/GB billed for bytes leaving ``cloud``."""
         return self.egress_table.get(cloud, self.default_egress_price)
 
     # ---- contention-aware bandwidth sharing --------------------------------
@@ -158,14 +162,17 @@ class Topology:
         return cap if cap is not None else self.default_capacity_gbps
 
     def tracks_contention(self, a: str, b: str) -> bool:
+        """True iff the a↔b pair has an aggregate capacity pinned."""
         return self.capacity_gbps(a, b) is not None
 
     def open_flow(self, a: str, b: str, nbytes: int = 0) -> None:
+        """Record a transfer starting on a↔b (driven by the interpreter)."""
         p = _pair(a, b)
         self._flows[p] = self._flows.get(p, 0) + 1
         self._flow_bytes[p] = self._flow_bytes.get(p, 0) + nbytes
 
     def close_flow(self, a: str, b: str, nbytes: int = 0) -> None:
+        """Record a transfer finishing on a↔b (clamped at zero)."""
         p = _pair(a, b)
         n = self._flows.get(p, 0) - 1
         self._flows[p] = n if n > 0 else 0
@@ -173,6 +180,7 @@ class Topology:
         self._flow_bytes[p] = left if left > 0 else 0
 
     def concurrent_flows(self, a: str, b: str) -> int:
+        """Transfers currently in flight on the a↔b pair."""
         return self._flows.get(_pair(a, b), 0)
 
     def inflight_bytes(self, a: str, b: str) -> int:
@@ -220,6 +228,7 @@ class CostModel:
     # ---- latency ----------------------------------------------------------
 
     def rtt_ms(self, a: str, b: str) -> float:
+        """a↔b round-trip (the ``rtt_override`` hook wins when given)."""
         if self._rtt_override is not None:
             return self._rtt_override(a, b)
         return self.topology.rtt_ms(a, b)
@@ -249,6 +258,7 @@ class CostModel:
     # ---- money ------------------------------------------------------------
 
     def egress_price_per_gb(self, cloud: str) -> float:
+        """$/GB leaving ``cloud`` (delegates to the topology's tariffs)."""
         return self.topology.egress_price_per_gb(cloud)
 
     def egress_usd(self, src: str, dst: str, nbytes: int) -> float:
@@ -263,6 +273,8 @@ class CostModel:
     def stage_cost(self, flavor: cal.Flavor, compute_ms: float,
                    fixed_ms: float = 0.0, memory_gb: Optional[float] = None,
                    accel: bool = True) -> Tuple[float, float]:
+        """(duration_ms, usd) of one stage execution on ``flavor`` — see
+        module-level :func:`stage_cost`."""
         return stage_cost(flavor, compute_ms, fixed_ms, memory_gb, accel)
 
     # ---- per-hop overheads -------------------------------------------------
@@ -326,6 +338,7 @@ class NodeProfile:
     samples: int = 0
 
     def as_dict(self) -> dict:
+        """JSON-ready form (rounded; see ``EdgeProfiles.as_dict``)."""
         return {"name": self.name, "out_bytes": self.out_bytes,
                 "compute_ms": round(self.compute_ms, 3),
                 "fixed_ms": round(self.fixed_ms, 3), "accel": self.accel,
@@ -403,6 +416,7 @@ class EdgeProfiles:
     # ---- planner-facing queries -------------------------------------------
 
     def out_bytes(self, name: str) -> Optional[int]:
+        """Learned mean output wire size of node ``name`` (None: untraced)."""
         p = self.nodes.get(name)
         return p.out_bytes if p is not None else None
 
@@ -418,10 +432,12 @@ class EdgeProfiles:
     # ---- (de)serialization (persist a pilot run's calibration) -------------
 
     def as_dict(self) -> dict:
+        """JSON-ready per-node profiles (round-trips via :meth:`from_dict`)."""
         return {n: p.as_dict() for n, p in sorted(self.nodes.items())}
 
     @classmethod
     def from_dict(cls, d: Mapping[str, Mapping[str, Any]]) -> "EdgeProfiles":
+        """Rehydrate profiles persisted with :meth:`as_dict`."""
         return cls({n: NodeProfile(
             name=v.get("name", n), out_bytes=int(v["out_bytes"]),
             compute_ms=float(v["compute_ms"]), fixed_ms=float(v["fixed_ms"]),

@@ -151,6 +151,8 @@ class PlacementPlan:
         return out
 
     def as_dict(self) -> Dict[str, Any]:
+        """JSON-ready summary (assignment, failover orders, estimates) —
+        what the benchmark harnesses persist per planned arm."""
         return {"workflow": self.workflow, "objective": self.objective,
                 "weight": self.weight, "assignment": dict(self.assignment),
                 "failover": {k: list(v) for k, v in self.failover.items()},

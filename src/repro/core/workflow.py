@@ -29,6 +29,11 @@ from repro.core import subgraph as sg
 
 @dataclass
 class DeployedWorkflow:
+    """A compiled workflow living on one Backend: launch instances
+    (:meth:`start`), extract results/makespans from the record-query
+    surface, and re-place it at runtime (:meth:`replan`,
+    :meth:`learn_profiles` — both need optional backend capabilities)."""
+
     spec: sg.WorkflowSpec
     views: Dict[str, sg.NodeView]
     backend: Backend
@@ -44,6 +49,8 @@ class DeployedWorkflow:
 
     @property
     def entry(self) -> sg.NodeView:
+        """Compiled view of the workflow's entry function — the node
+        external clients (``start``) address."""
         assert self.spec.entry is not None
         return self.views[self.spec.entry]
 
@@ -65,6 +72,9 @@ class DeployedWorkflow:
         return self.backend.workflow_records(str(workflow_id))
 
     def makespan_ms(self, workflow_id: str, *, include_gc: bool = False) -> float:
+        """End-to-end latency of one instance: first queue time to last
+        completion over its ``done`` records (GC excluded by default).
+        NaN while nothing has completed."""
         recs = [r for r in self.executions(workflow_id)
                 if r.status == "done" and (include_gc or r.function != sg.GC_FUNCTION)]
         if not recs:
@@ -74,6 +84,8 @@ class DeployedWorkflow:
         return t1 - t0
 
     def result_of(self, workflow_id: str, function: str) -> Any:
+        """Latest ``done`` result of ``function`` in one instance (None if
+        it never completed) — exactly-once means retries agree on it."""
         done = [r for r in self.executions(workflow_id)
                 if r.function == function and r.status == "done"]
         return done[-1].result if done else None
