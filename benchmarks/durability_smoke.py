@@ -1,0 +1,167 @@
+"""Durability smoke gate: kill -9 a LocalRunner mid-workflow, resume, verify.
+
+The CI contract for durable execution (``deploy(..., durable=True)`` +
+``DeployedWorkflow.resume()``):
+
+1. A **worker process** starts a :class:`repro.backends.localjax.LocalRunner`
+   over a WAL-backed store directory, durable-deploys a two-stage workflow
+   whose first stage records a side effect (one line in ``effects.log``) and
+   then suspends on a multi-second ``Sleep``, and drives it.
+2. The parent waits for the side effect to land, then **SIGKILLs** the worker
+   — no atexit, no flush hooks, the process is gone mid-suspension.
+3. The parent constructs a **fresh runner over the same store directory**,
+   re-deploys the same spec, calls ``resume()``, and drains.
+
+Pass criteria (exit 0):
+
+* the resumed run reaches the *identical final result* an uninterrupted
+  run produces;
+* **zero duplicate side effects** — each stage's effect line appears exactly
+  once across the killed attempt and the replayed one (the journal suppressed
+  the re-execution of the first stage's user code);
+* the remaining sleep is honored from the journaled absolute deadline, not
+  restarted (bounded wall-clock budget enforces this).
+
+    PYTHONPATH=src python benchmarks/durability_smoke.py
+
+(The ``--worker <dir>`` entry point is internal: it is what the gate spawns
+and then kills.)
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import signal
+import subprocess
+import sys
+import time
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_ROOT = os.path.dirname(_HERE)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+SLEEP_MS = 4000.0          # stage-b suspension the kill lands inside
+KILL_GRACE_S = 0.5         # after the side effect lands: journal commit is
+                           # microseconds away, the sleep is seconds away
+WALL_BUDGET_S = 60.0       # whole gate, including the remaining sleep
+INPUT_V = 3
+EXPECT_B = {"v": INPUT_V * 2 + 10}
+
+
+def _effects_path(store_dir: str) -> str:
+    return os.path.join(store_dir, "effects.log")
+
+
+def _mark(store_dir: str, stage: str) -> None:
+    with open(_effects_path(store_dir), "a") as f:
+        f.write(stage + "\n")
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def build_spec(store_dir: str):
+    from repro.core import subgraph as sg
+
+    # a stage's sleep suspends at its *start*, so the kill window opens once
+    # stage a's side effect lands: b is then parked mid-sleep for seconds
+    spec = sg.WorkflowSpec("dsmoke")
+    spec.function(
+        "a", "aws/lambda",
+        workload=lambda e: (_mark(store_dir, "a"), {"v": e["v"] * 2})[1])
+    spec.function(
+        "b", "aliyun/fc", sleep_ms=SLEEP_MS,
+        workload=lambda e: (_mark(store_dir, "b"), {"v": e["v"] + 10})[1])
+    spec.sequence("a", "b")
+    return spec
+
+
+def worker(store_dir: str) -> int:
+    """Internal: the process the gate SIGKILLs mid-suspension."""
+    from repro.backends.localjax import LocalRunner
+    from repro.core.workflow import deploy
+
+    runner = LocalRunner(concurrency=2, store_dir=store_dir)
+    dep = deploy(runner, build_spec(store_dir), durable=True)
+    dep.start({"v": INPUT_V}, workflow_id="dsmoke-000000")
+    runner.run(timeout_s=WALL_BUDGET_S)      # killed long before this returns
+    return 0
+
+
+def gate() -> int:
+    import tempfile
+
+    from repro.backends.localjax import LocalRunner
+    from repro.core.workflow import deploy
+
+    t0 = time.monotonic()
+    with tempfile.TemporaryDirectory(prefix="durability-smoke-") as store_dir:
+        proc = subprocess.Popen(
+            [sys.executable, os.path.abspath(__file__), "--worker", store_dir],
+            env={**os.environ,
+                 "PYTHONPATH": os.path.join(_ROOT, "src")})
+        try:
+            # wait for stage a's side effect, then kill mid-sleep
+            effects = _effects_path(store_dir)
+            while not os.path.exists(effects):
+                if proc.poll() is not None:
+                    print("FAIL: worker exited before producing any effect")
+                    return 1
+                if time.monotonic() - t0 > WALL_BUDGET_S:
+                    print("FAIL: worker never produced stage a's effect")
+                    return 1
+                time.sleep(0.05)
+            time.sleep(KILL_GRACE_S)
+        finally:
+            if proc.poll() is None:
+                proc.send_signal(signal.SIGKILL)
+            proc.wait()
+        print(f"killed worker pid={proc.pid} mid-suspension "
+              f"(t={time.monotonic() - t0:.2f}s)")
+
+        # fresh runner over the same store directory: replay + resume
+        runner = LocalRunner(concurrency=2, store_dir=store_dir)
+        dep = deploy(runner, build_spec(store_dir), durable=True)
+        fids = dep.resume()
+        if not fids:
+            print("FAIL: resume() found nothing to rehydrate")
+            return 1
+        runner.run(timeout_s=WALL_BUDGET_S)
+        runner.close()
+
+        result = dep.result_of("dsmoke-000000", "b")
+        with open(effects) as f:
+            lines = [ln.strip() for ln in f if ln.strip()]
+        elapsed = time.monotonic() - t0
+
+        ok = True
+        if result != EXPECT_B:
+            print(f"FAIL: final result {result!r} != uninterrupted "
+                  f"reference {EXPECT_B!r}")
+            ok = False
+        if sorted(lines) != ["a", "b"]:
+            print(f"FAIL: duplicate or missing side effects: {lines!r} "
+                  f"(each stage must run exactly once across kill + resume)")
+            ok = False
+        if elapsed > WALL_BUDGET_S:
+            print(f"FAIL: gate took {elapsed:.1f}s > budget {WALL_BUDGET_S}s")
+            ok = False
+        if not ok:
+            return 1
+        print(f"durability smoke OK: resumed {fids}, result {result}, "
+              f"side effects {lines} (exactly once), wall {elapsed:.2f}s")
+        return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--worker", metavar="STORE_DIR", default=None,
+                    help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    if args.worker:
+        return worker(args.worker)
+    return gate()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -106,9 +106,13 @@ def build_specs():
             common.iot_spec(4), common.mc_spec(6)]
 
 
-def run_point(rate_wf_s: float, n: int, *, contended: bool = True) -> dict:
+def run_point(rate_wf_s: float, n: int, *, contended: bool = True,
+              durable: bool = False) -> dict:
     """One open-loop sweep point: ``n`` Poisson arrivals at ``rate_wf_s``,
-    generated and measured by :mod:`repro.core.traffic`.
+    generated and measured by :mod:`repro.core.traffic`.  ``durable=True``
+    deploys the mix with the event-sourced effect journal interposed
+    (roughly one extra table write per effect) — the ``--durable`` arm
+    measures exactly that overhead against the journaling-off baseline.
 
     Two wall-clock figures come out: ``events_per_s_engine`` (the event loop
     alone) and ``events_per_s`` (event loop *plus* per-workflow makespan
@@ -121,7 +125,7 @@ def run_point(rate_wf_s: float, n: int, *, contended: bool = True) -> dict:
                                     "aliyun": SLOTS_PER_CLOUD})
     else:
         sim = SimCloud(seed=SIM_SEED)   # pre-rework-comparable substrate
-    deps = [wf.deploy(sim, spec) for spec in build_specs()]
+    deps = [wf.deploy(sim, spec, durable=durable) for spec in build_specs()]
     schedule = traffic.PoissonProcess(rate_wf_s, seed=ARRIVAL_SEED).schedule(
         n, streams=len(deps))
     runner = traffic.LoadRunner(deps, input_value=0)
@@ -138,6 +142,7 @@ def run_point(rate_wf_s: float, n: int, *, contended: bool = True) -> dict:
         "rate_wf_s": rate_wf_s,
         "n": n,
         "contended": contended,
+        "durable": durable,
         "completed": point.completed,
         "dropped": point.dropped,
         "p50_ms": round(point.p50_ms, 1) if point.p50_ms is not None else None,
@@ -253,6 +258,60 @@ def run_drift(verbose: bool = True) -> dict:
 
 
 # ==========================================================================
+# Durable arm — journal-write overhead at the pinned smoke point
+# ==========================================================================
+
+# The pinned smoke-point latencies (rate 30 wf/s, n=500, SIM_SEED=42,
+# ARRIVAL_SEED=123).  Journaling is strictly opt-in, so the journaling-off
+# run must keep reproducing these exactly; the durable run's deltas against
+# them are the journal's cost.
+SMOKE_BASELINE_P50_MS = 626.3
+SMOKE_BASELINE_P99_MS = 2216.0
+
+
+def run_durable(verbose: bool = True) -> dict:
+    """Journal-write overhead: the smoke point with and without the
+    event-sourced effect journal.  Fails (``ok=False``) if the journaling-
+    off baseline drifts from the pinned p50/p99, or if the durable arm
+    drops or fails to complete any workflow."""
+    base = run_point(SMOKE_RATE, SMOKE_N, durable=False)
+    dur = run_point(SMOKE_RATE, SMOKE_N, durable=True)
+    ok = True
+    if (base["p50_ms"] != SMOKE_BASELINE_P50_MS
+            or base["p99_ms"] != SMOKE_BASELINE_P99_MS):
+        print(f"[durable] FAIL: journaling-off baseline moved: "
+              f"p50 {base['p50_ms']} (pinned {SMOKE_BASELINE_P50_MS}), "
+              f"p99 {base['p99_ms']} (pinned {SMOKE_BASELINE_P99_MS}) — "
+              f"durable execution must be strictly opt-in")
+        ok = False
+    if dur["dropped"] or dur["completed"] != SMOKE_N:
+        print(f"[durable] FAIL: durable arm completed {dur['completed']}/"
+              f"{SMOKE_N} with {dur['dropped']} drops")
+        ok = False
+    out = {
+        "rate_wf_s": SMOKE_RATE, "n": SMOKE_N,
+        "baseline": base, "durable": dur,
+        "p50_overhead_ms": round(dur["p50_ms"] - base["p50_ms"], 1),
+        "p99_overhead_ms": round(dur["p99_ms"] - base["p99_ms"], 1),
+        "p50_overhead_pct": round(
+            100.0 * (dur["p50_ms"] / base["p50_ms"] - 1.0), 1),
+        "events_ratio": round(dur["events"] / base["events"], 3),
+        "ok": ok,
+    }
+    if verbose:
+        print(f"[durable] baseline: p50 {base['p50_ms']} ms  "
+              f"p99 {base['p99_ms']} ms  events {base['events']}")
+        print(f"[durable] journaled: p50 {dur['p50_ms']} ms  "
+              f"p99 {dur['p99_ms']} ms  events {dur['events']}")
+        print(f"[durable] overhead: p50 +{out['p50_overhead_ms']} ms "
+              f"({out['p50_overhead_pct']}%), "
+              f"p99 +{out['p99_overhead_ms']} ms, "
+              f"events ×{out['events_ratio']}"
+              + ("" if ok else "  → FAIL"))
+    return out
+
+
+# ==========================================================================
 # CI gate and CLI
 # ==========================================================================
 
@@ -298,11 +357,28 @@ def main() -> int:
                     help="only the online-re-planning drift arm "
                          "(static vs adaptive; non-zero exit unless "
                          "adaptive wins post-drift)")
+    ap.add_argument("--durable", action="store_true",
+                    help="only the durable arm: journal-write overhead at "
+                         "the pinned smoke point, merged into --out "
+                         "(non-zero exit if the journaling-off baseline "
+                         "moved or the durable run dropped workflows)")
     args = ap.parse_args()
     if args.smoke:
         return smoke()
     if args.drift:
         return 0 if run_drift()["adaptive_beats_static"] else 1
+    if args.durable:
+        result = run_durable()
+        merged = {}
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                merged = json.load(f)
+        merged["durable"] = result
+        with open(args.out, "w") as f:
+            json.dump(merged, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote durable arm into {args.out}")
+        return 0 if result["ok"] else 1
 
     rates = [float(r) for r in args.rates.split(",") if r]
     substrate = {

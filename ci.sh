@@ -17,4 +17,8 @@ if [ "$#" -eq 0 ]; then
     # open-loop local gate: Poisson arrivals honored as wall-clock submit
     # delays on the concurrent backend (zero drops, all arrivals complete)
     python benchmarks/run.py --backend local --open-loop --smoke
+    # durability gate: SIGKILL a LocalRunner mid-workflow, resume a fresh
+    # runner over the same WAL store — identical final results, zero
+    # duplicate side effects
+    python benchmarks/durability_smoke.py
 fi

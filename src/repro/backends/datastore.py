@@ -16,9 +16,12 @@ enforced here:
 from __future__ import annotations
 
 import copy
+import io
+import os
+import pickle
 from bisect import bisect_left, insort
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 # Isolation copies (puts/gets copy the value so callers can't alias store
 # state).  ``copy.deepcopy`` is the semantic model but far too slow for the
@@ -136,6 +139,171 @@ class TableState:
 
     def __len__(self) -> int:
         return len(self.items)
+
+
+# ==========================================================================
+# Durable-execution journal: key scheme + recovery scanner (substrate-blind)
+# ==========================================================================
+#
+# The effect journal reuses this module's linearizable-table machinery: each
+# journaled attempt owns the ``{function_id}#j/`` key range in its node's
+# home table.  ``#`` cannot appear in function ids (naming.py builds them
+# from ``{wfid}/{name}_{step}`` plus ``-itN``/``-bindex-N``), so the range is
+# collision-free, and because function ids start with ``{wfid}/`` the GC's
+# workflow-prefix sweep naturally *sees* journal keys — ``gc_handler`` must
+# therefore check ``journal_is_open`` before deleting (see orchestrator.py).
+#
+#   {fid}#j/start      — {"faas":…, "function":…, "event":…}; created before
+#                        the first live effect, consumed by resume()
+#   {fid}#j/e{seq:06d} — envelope of effect #seq's committed result:
+#                        {"r": value} | {"e": [etype, msg]} | {"deadline": t}
+#   {fid}#j/done       — terminal marker; attempts with start-but-no-done
+#                        are the incomplete set a fresh backend re-delivers
+#
+# First-commit-wins: entries are written with ``create_if_absent``; a racing
+# duplicate attempt that loses the create adopts the stored result, which is
+# what keeps replay deterministic across concurrent retries.
+
+JOURNAL_SEP = "#j/"
+JOURNAL_START = "start"
+JOURNAL_DONE = "done"
+SIGNAL_NS = "__signal__"
+
+
+def journal_entry_key(function_id: str, seq: int) -> str:
+    return f"{function_id}{JOURNAL_SEP}e{seq:06d}"
+
+
+def journal_start_key(function_id: str) -> str:
+    return f"{function_id}{JOURNAL_SEP}{JOURNAL_START}"
+
+
+def journal_done_key(function_id: str) -> str:
+    return f"{function_id}{JOURNAL_SEP}{JOURNAL_DONE}"
+
+
+def signal_key(workflow_id: str, name: str) -> str:
+    """Durable per-workflow signal latch key (first delivery wins)."""
+    return f"{workflow_id}/{SIGNAL_NS}/{name}"
+
+
+def journal_is_open(state: TableState, function_id: str) -> bool:
+    """True iff ``function_id`` has a started-but-not-finished journal in
+    ``state`` — i.e. the attempt is live or suspended and its keys must
+    survive GC."""
+    return (journal_start_key(function_id) in state.items
+            and journal_done_key(function_id) not in state.items)
+
+
+def incomplete_starts(state: TableState) -> List[Tuple[str, Any]]:
+    """All ``(function_id, start_record)`` pairs in ``state`` whose journal
+    is open.  This is the recovery scan ``resume()`` runs over a journal-
+    capable backend's tables — a cold-path full-key walk, not something the
+    event loop ever does."""
+    suffix = JOURNAL_SEP + JOURNAL_START
+    out: List[Tuple[str, Any]] = []
+    for key in state._sorted_keys:
+        if key.endswith(suffix):
+            fid = key[: -len(suffix)]
+            if journal_done_key(fid) not in state.items:
+                out.append((fid, state.get(key)))
+    return out
+
+
+# ==========================================================================
+# Write-ahead-logged table: TableState that survives process death
+# ==========================================================================
+
+
+class PersistentTableState(TableState):
+    """A :class:`TableState` whose every mutation is appended to a pickle
+    write-ahead log before it is applied, and which rebuilds itself by
+    replaying that log on open.
+
+    ``flush()`` after each record moves the bytes into the kernel page
+    cache, so state survives ``kill -9`` of the owning process (the
+    durability the ``--durability-smoke`` gate exercises); surviving a
+    machine crash would need fsync, which this deliberately skips for
+    speed.  A torn tail record (the process died mid-append) is tolerated:
+    replay stops at the last complete record and the file is truncated
+    back to it.
+    """
+
+    def __init__(self, name: str, path: str):
+        super().__init__(name)
+        self.path = path
+        self._log: Optional[io.BufferedWriter] = None
+        self._replay()
+        self._log = open(path, "ab")
+
+    def _replay(self) -> None:
+        if not os.path.exists(self.path):
+            return
+        good = 0
+        with open(self.path, "rb") as f:
+            while True:
+                try:
+                    op = pickle.load(f)
+                except EOFError:
+                    break
+                except Exception:      # torn tail: stop at last whole record
+                    break
+                self._apply_op(op)
+                good = f.tell()
+        size = os.path.getsize(self.path)
+        if good != size:
+            with open(self.path, "ab") as f:
+                f.truncate(good)
+
+    def _apply_op(self, op: Tuple) -> None:
+        tag = op[0]
+        if tag == "c":
+            TableState.create_if_absent(self, op[1], op[2])
+        elif tag == "a":
+            TableState.append_and_get_list(self, op[1], op[2])
+        elif tag == "b":
+            TableState.update_bitmap(self, op[2], op[1])
+        elif tag == "d":
+            TableState.delete(self, op[1])
+
+    def _append(self, op: Tuple) -> None:
+        if self._log is not None:
+            pickle.dump(op, self._log)
+            self._log.flush()
+
+    # -- logged mutations ----------------------------------------------------
+
+    def create_if_absent(self, key: str, value: Any) -> bool:
+        created = super().create_if_absent(key, value)
+        if created:
+            self._append(("c", key, value))
+        return created
+
+    def append_and_get_list(self, key: str, items: Sequence[Any]) -> List[Any]:
+        out = super().append_and_get_list(key, items)
+        self._append(("a", key, list(items)))
+        return out
+
+    def update_bitmap(self, index: int, key: str) -> List[bool]:
+        out = super().update_bitmap(index, key)
+        self._append(("b", key, index))
+        return out
+
+    def delete(self, keys: Sequence[str]) -> int:
+        n = super().delete(keys)
+        self._append(("d", list(keys)))
+        return n
+
+    def close(self) -> None:
+        if self._log is not None:
+            self._log.flush()
+            self._log.close()
+            self._log = None
+
+
+def wal_path(store_dir: str, table_name: str) -> str:
+    """Canonical WAL file for a table id (``aws/dynamodb`` → ``aws__dynamodb.wal``)."""
+    return os.path.join(store_dir, table_name.replace("/", "__") + ".wal")
 
 
 class InMemoryDS:

@@ -33,6 +33,7 @@ exactly-once protocol of §4.1 doubles as the trainer's step-commit.
 from __future__ import annotations
 
 import itertools
+import os
 import threading
 import time
 from bisect import bisect_left, insort
@@ -41,7 +42,8 @@ from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple, Union
 
 from repro.backends import calibration as cal
 from repro.backends import shim
-from repro.backends.datastore import TableState
+from repro.backends.datastore import (PersistentTableState, TableState,
+                                      signal_key, wal_path)
 from repro.backends.shim import (Deployment, ExecutionRecord, Workload,
                                  estimate_size)
 
@@ -55,6 +57,18 @@ class _Killed(BaseException):
     injected crash).  A ``BaseException`` so the orchestrator's
     ``except ShimError`` clauses cannot swallow it — the generator is
     abandoned, mirroring SimCloud disarming a continuation."""
+
+
+class _Suspend(BaseException):
+    """Control flow for ``Sleep``/``WaitForSignal``: the current attempt
+    parks — its generator is kept alive off-thread and the worker is
+    released (zero concurrency slots while suspended).  ``arrange`` is
+    called with a resume callback that re-enqueues the parked execution
+    when the wake condition fires.  A ``BaseException`` for the same
+    reason as :class:`_Killed`."""
+
+    def __init__(self, arrange: Callable[[Callable[[Any], None]], None]):
+        self.arrange = arrange
 
 
 # ==========================================================================
@@ -162,10 +176,11 @@ class LocalExecution:
         self.gen = dep.handler(record.payload)
         self.effect_index = 0
 
-    def drive(self) -> Any:
-        """Step the effect generator to completion on this thread."""
+    def drive(self, value: Any = None) -> Any:
+        """Step the effect generator to completion on this thread.  A
+        parked attempt is resumed by calling ``drive(wake_value)`` again
+        from whichever worker picks up its resume continuation."""
         runner = self.runner
-        value: Any = None
         exc: Optional[BaseException] = None
         while True:
             try:
@@ -210,8 +225,18 @@ class LocalRunner:
 
     def __init__(self, config: Optional[dict] = None, *,
                  concurrency: Union[int, Mapping[str, int]] = 8,
-                 max_requeues: int = 8, retry_backoff_ms: float = 25.0):
+                 max_requeues: int = 8, retry_backoff_ms: float = 25.0,
+                 store_dir: Optional[str] = None):
         self._config = config or cal.default_jointcloud()
+        self.store_dir = store_dir
+        if store_dir is not None:
+            os.makedirs(store_dir, exist_ok=True)
+
+        def _state(did: str) -> TableState:
+            if store_dir is None:
+                return TableState(did)
+            return PersistentTableState(did, wal_path(store_dir, did))
+
         self.stores: Dict[str, LockedTableState] = {}
         self.faas: Dict[str, LocalFaaS] = {}
         for cname, c in self._config["clouds"].items():
@@ -225,10 +250,25 @@ class LocalRunner:
                 self.faas[fid] = LocalFaaS(fid, cname, flavor, quota, conc)
             for t in c.get("tables", []):
                 did = shim.ds_id(cname, t)
-                self.stores[did] = LockedTableState(TableState(did), cname, "table")
+                self.stores[did] = LockedTableState(_state(did), cname, "table")
             for o in c.get("objects", []):
                 did = shim.ds_id(cname, o)
-                self.stores[did] = LockedTableState(TableState(did), cname, "object")
+                self.stores[did] = LockedTableState(_state(did), cname, "object")
+
+        # durable execution: the ``journal`` capability is an *attribute*
+        # (None when absent) so the Backend-protocol getattr probe is falsy
+        # on a purely in-memory runner, whose journal dies with the process.
+        # WAL-backed stores — or stores adopted from a live runner — qualify.
+        self.journal: Optional[Callable[[], List[TableState]]] = (
+            self._journal_tables if store_dir is not None else None)
+        # signal latches: first delivery wins; the durable copy lives in the
+        # canonical signal table so re-waits after a crash observe it
+        self._signals: Dict[Tuple[str, str], Any] = {}
+        self._signal_waiters: Dict[Tuple[str, str],
+                                   List[Callable[[Any], None]]] = {}
+        self._signal_table = min(
+            (d for d, s in self.stores.items() if s.kind == "table"),
+            default=None)
 
         self.deployments: Dict[Tuple[str, str], Deployment] = {}
         self.records: List[ExecutionRecord] = []
@@ -269,6 +309,8 @@ class LocalRunner:
             shim.DsUpdateBitmap: self._perform_ds,
             shim.DsListPrefix: self._perform_ds,
             shim.DsDelete: self._perform_ds,
+            shim.Sleep: self._perform_sleep,
+            shim.WaitForSignal: self._perform_wait_signal,
         }
 
     # ---- Backend protocol: deployment / invocation -------------------------
@@ -440,27 +482,55 @@ class LocalRunner:
         q = self._queues[faas.id]
         cond = self._qcond[faas.id]
         while True:
+            resume = None
             with self._lock:
                 while not q and not self._stop:
                     cond.wait()
                 if self._stop:
                     return
-                rec = q.popleft()
+                item = q.popleft()
+                if type(item) is tuple:        # (_RESUME-style) parked wake
+                    _, ex, value = item
+                    rec = ex.record
+                    resume = (ex, value)
+                else:
+                    rec = item
                 if faas.down:
                     rec.status = "crashed"    # connection never established
                     rec.t_end = _now_ms()
             if rec.status == "crashed":
+                # a parked attempt woken into an outage crashes like any
+                # other in-flight attempt: generator abandoned, redelivered
                 self._retry_or_drop(faas, rec)
                 continue
-            self._run_attempt(faas, rec)
+            if resume is not None:
+                ex, value = resume
+                rec.status = "running"
+                self._drive_attempt(faas, rec, ex, value)
+            else:
+                self._run_attempt(faas, rec)
 
     def _run_attempt(self, faas: LocalFaaS, rec: ExecutionRecord) -> None:
         dep = self.deployments[(faas.id, rec.function)]
         rec.t_start = _now_ms()
         rec.status = "running"
         ex = LocalExecution(self, dep, faas, rec)
+        self._drive_attempt(faas, rec, ex, None)
+
+    def _drive_attempt(self, faas: LocalFaaS, rec: ExecutionRecord,
+                       ex: LocalExecution, value: Any) -> None:
+        """Drive one attempt (fresh or woken) until it terminates or parks.
+        Parking frees this worker thread: the generator stays alive inside
+        ``ex`` and the suspension's ``arrange`` hook re-enqueues it."""
         try:
-            result = ex.drive()
+            result = ex.drive(value)
+        except _Suspend as s:
+            rec.status = "suspended"
+            # NOT finalized: the invocation is still logically outstanding,
+            # so ``run`` keeps waiting for the wake — but no worker thread
+            # (= concurrency slot) is held while it sleeps
+            s.arrange(lambda v: self._unpark(faas, ex, v))
+            return
         except (_Killed, shim.ShimError):
             # the attempt died between effects (outage/injected crash) or a
             # shim error escaped the handler: at-least-once redelivery
@@ -485,6 +555,13 @@ class LocalRunner:
         with self._lock:
             self._done_records.append(rec)
             self._finalize()
+
+    def _unpark(self, faas: LocalFaaS, ex: LocalExecution, value: Any) -> None:
+        """Re-enqueue a parked attempt's continuation; the next free worker
+        on its FaaS resumes the generator with ``value``."""
+        with self._lock:
+            self._queues[faas.id].append(("resume", ex, value))
+            self._qcond[faas.id].notify()
 
     # ---- effect interpreter ------------------------------------------------
 
@@ -540,6 +617,11 @@ class LocalRunner:
         subs = list(effect.effects)
         if not subs:
             return []
+        if any(type(s) in (shim.Sleep, shim.WaitForSignal) for s in subs):
+            # suspension parks the *whole attempt* — inside a Parallel that
+            # would strand the sibling threads, so it is rejected loudly
+            raise shim.ShimError(
+                "Sleep/WaitForSignal cannot run inside Parallel")
         results: List[Any] = [None] * len(subs)
         fatal: List[BaseException] = []
 
@@ -583,6 +665,95 @@ class LocalRunner:
         if klass is shim.DsDelete:
             return st.delete(effect.keys)
         raise TypeError(f"unknown datastore effect {effect!r}")
+
+    # ---- durable execution: suspension, signals, journal -------------------
+
+    def _perform_sleep(self, ex: LocalExecution, effect: shim.Sleep) -> None:
+        if effect.ms <= 0:
+            return None
+        raise _Suspend(lambda resume:
+                       self._after_ms(effect.ms, resume, None))
+
+    def _perform_wait_signal(self, ex: LocalExecution,
+                             effect: shim.WaitForSignal) -> Any:
+        scope = effect.scope
+        if not scope:
+            raise shim.ShimError(
+                f"WaitForSignal({effect.name!r}) reached the interpreter "
+                f"with no workflow scope")
+        key = (scope, effect.name)
+        with self._lock:
+            if key in self._signals:
+                return self._signals[key]
+        if self._signal_table is not None:
+            # durable latch: a signal delivered before a crash is observed
+            # by the re-delivered (or rehydrated) attempt
+            stored = self.stores[self._signal_table].get(
+                signal_key(scope, effect.name))
+            if stored is not None:
+                with self._lock:
+                    self._signals.setdefault(key, stored["v"])
+                    return self._signals[key]
+
+        def arrange(resume: Callable[[Any], None]) -> None:
+            # re-check under the lock: a delivery racing the park must not
+            # be lost — either it latched already (wake immediately) or the
+            # waiter is registered before the latch can be set
+            with self._lock:
+                if key not in self._signals:
+                    self._signal_waiters.setdefault(key, []).append(resume)
+                    return
+                value = self._signals[key]
+            resume(value)
+
+        raise _Suspend(arrange)
+
+    def signal(self, workflow_id: str, name: str, value: Any = True,
+               t: float = 0.0) -> None:
+        """Deliver a named signal to one workflow instance (Backend-protocol
+        ``signal`` capability).  First delivery wins; ``t`` is a wall-clock
+        delay in ms, same contract as ``submit(t=)``."""
+        if t < 0:
+            raise ValueError(f"signal delay t={t} ms must be >= 0")
+        if t > 0:
+            self._after_ms(t, self._deliver_signal, str(workflow_id),
+                           name, value)
+        else:
+            self._deliver_signal(str(workflow_id), name, value)
+
+    def _deliver_signal(self, wfid: str, name: str, value: Any) -> None:
+        if self._signal_table is not None:
+            st = self.stores[self._signal_table]
+            if not st.create_if_absent(signal_key(wfid, name), {"v": value}):
+                value = st.get(signal_key(wfid, name))["v"]   # first one won
+        key = (wfid, name)
+        with self._lock:
+            value = self._signals.setdefault(key, value)
+            waiters = self._signal_waiters.pop(key, [])
+        for resume in waiters:
+            resume(value)
+
+    def _journal_tables(self) -> List[TableState]:
+        """Raw table states holding the effect journal (``journal``
+        capability; see ``repro.core.durable.resume``)."""
+        return [s.state for s in self.stores.values() if s.kind == "table"]
+
+    def adopt_stores(self, other: "LocalRunner") -> None:
+        """Share ``other``'s datastore contents (checkpoints + journal),
+        modeling a fresh runner instance over the same persistent stores —
+        which grants this runner the ``journal`` capability."""
+        for did, store in self.stores.items():
+            src = other.stores.get(did)
+            if src is not None:
+                store.state = src.state
+        self.journal = self._journal_tables
+
+    def close(self) -> None:
+        """Release WAL file handles (no-op for in-memory stores)."""
+        for store in self.stores.values():
+            closer = getattr(store.state, "close", None)
+            if closer is not None:
+                closer()
 
     # ---- Backend protocol: record queries ----------------------------------
 

@@ -215,6 +215,34 @@ class Parallel(Effect):
 
 
 @dataclass
+class Sleep(Effect):
+    """Suspend the current execution for ``ms`` (virtual or wall) without
+    occupying a concurrency slot.
+
+    The interpreter MUST release the execution's slot/worker for the whole
+    duration and re-acquire one at wake-up — a sleeping workflow costs no
+    capacity and (SimCloud) no GB·s billing.  Result: ``None``.
+    """
+
+    ms: float
+
+
+@dataclass
+class WaitForSignal(Effect):
+    """Suspend until ``backend.signal(workflow_id, name)`` delivers ``name``.
+
+    Signals are per-workflow latches: delivery before the wait resolves the
+    wait immediately (no lost-wakeup), the first delivery wins, and the
+    latch is durable (journal-capable backends persist it so a replayed
+    workflow observes the same value).  Like :class:`Sleep`, a waiting
+    execution occupies zero concurrency slots.  Result: the signal value.
+    """
+
+    name: str
+    scope: str = ""          # workflow id; interpreters fill it from context
+
+
+@dataclass
 class Now(Effect):
     """Current time in ms (virtual or wall). Result: float."""
 
@@ -446,9 +474,11 @@ class Deployment:
 class ExecutionRecord:
     """One attempt of a deployed function, as every backend reports it.
 
-    ``status`` ∈ queued|running|done|crashed|aborted|dropped — ``dropped``
-    marks an invocation abandoned after the substrate's retry budget was
-    exhausted (it must be *recorded*, never silently discarded)."""
+    ``status`` ∈ queued|running|suspended|done|crashed|aborted|dropped —
+    ``dropped`` marks an invocation abandoned after the substrate's retry
+    budget was exhausted (it must be *recorded*, never silently discarded);
+    ``suspended`` marks an attempt parked on ``Sleep``/``WaitForSignal``,
+    holding no concurrency slot until its wake condition fires."""
 
     exec_id: int
     function: str
@@ -514,6 +544,20 @@ class Backend(Protocol):
     (a mapping ``faas_id -> object`` with ``.flavor``/``.cloud``) enable
     ``DeployedWorkflow.replan()``/``learn_profiles()``; backends without
     them get a :class:`CapabilityError` instead of an ``AttributeError``.
+
+    The durable-execution pair (probed the same way):
+
+    * ``journal`` — truthy iff the backend's datastores persist the
+      ``{function_id}#j/…`` effect journal across backend instances (see
+      ``docs/backends.md`` §"Durable execution").  Enables
+      ``DeployedWorkflow.resume()``: a fresh backend constructed over the
+      same stores replays journaled effects through the unchanged handler
+      code, suppressing live side effects until the journal is exhausted.
+    * ``signal(workflow_id, name, value=True, t=0.0)`` — deliver a named
+      signal to a workflow, resolving any :class:`WaitForSignal` on it.
+      ``t`` is a delay in ms, same contract as ``submit(t=)``.  Backends
+      without it get a :class:`CapabilityError` from
+      ``DeployedWorkflow.signal()`` and ``traffic.LoadRunner``.
     """
 
     deployments: Dict[Tuple[str, str], Deployment]

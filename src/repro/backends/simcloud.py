@@ -64,7 +64,7 @@ from typing import (Any, Callable, Dict, Generator, List, Mapping, Optional,
 from repro.backends import calibration as cal
 from repro.backends import shim
 from repro.backends.billing import Bill
-from repro.backends.datastore import TableState
+from repro.backends.datastore import TableState, signal_key
 
 
 # Shared runtime types live in the shim (backend-agnostic); re-exported here
@@ -135,11 +135,16 @@ class DataStoreService:
         return cal.TABLE_WRITE_MS if self.kind == "table" else cal.OBJECT_WRITE_MS
 
 
+# Sentinel first element of a FaaSSystem.pending entry marking a suspended
+# execution waiting to re-acquire a slot (vs a new (dep, payload, rec) start).
+_RESUME = object()
+
+
 class Execution:
     """One running attempt of a deployed function (drives its generator)."""
 
     __slots__ = ("sim", "dep", "payload", "record", "gen", "effect_index",
-                 "alive", "faas_obj", "cloud")
+                 "alive", "faas_obj", "cloud", "suspended_ms", "suspend_t0")
 
     def __init__(self, sim: "SimCloud", dep: Deployment, payload: Any,
                  record: ExecutionRecord):
@@ -152,6 +157,8 @@ class Execution:
         self.alive = True
         self.faas_obj = sim.faas[dep.faas]     # hot-path cache
         self.cloud = self.faas_obj.cloud
+        self.suspended_ms = 0.0       # Sleep/WaitForSignal time: not billed
+        self.suspend_t0 = 0.0
 
     # ---- generator stepping ------------------------------------------------
 
@@ -219,9 +226,10 @@ class Execution:
         self.sim._done_records.append(self.record)
         faas = self.faas_obj
         mem = self.dep.memory_gb or faas.flavor.memory_gb
-        self.sim.bill.charge_execution(faas.cloud, mem,
-                                       self.record.t_end - self.record.t_start,
-                                       faas.flavor.price_per_gb_s)
+        self.sim.bill.charge_execution(
+            faas.cloud, mem,
+            self.record.t_end - self.record.t_start - self.suspended_ms,
+            faas.flavor.price_per_gb_s)
         self.sim._release_slot(faas)
 
     def kill(self) -> None:
@@ -240,9 +248,10 @@ class Execution:
         faas = self.faas_obj
         mem = self.dep.memory_gb or faas.flavor.memory_gb
         if not math.isnan(self.record.t_start):
-            self.sim.bill.charge_execution(faas.cloud, mem,
-                                           self.record.t_end - self.record.t_start,
-                                           faas.flavor.price_per_gb_s)
+            self.sim.bill.charge_execution(
+                faas.cloud, mem,
+                self.record.t_end - self.record.t_start - self.suspended_ms,
+                faas.flavor.price_per_gb_s)
         self.sim._release_slot(faas)
 
 
@@ -311,6 +320,17 @@ class SimCloud:
         self.crash_policy: Optional[Callable[[Execution, shim.Effect], bool]] = None
         self.dropped: List[Tuple[str, str, Any]] = []   # (faas, function, payload)
 
+        # Durable-execution support.  Signals are per-workflow latches: the
+        # in-memory map serves live waits, the durable copy (written to the
+        # canonical signal table — smallest table-store id, a deterministic
+        # choice every instance over the same stores agrees on) survives
+        # into adopted/fresh backends.
+        self._signals: Dict[Tuple[str, str], Any] = {}
+        self._signal_waiters: Dict[Tuple[str, str], List[Execution]] = {}
+        self._signal_table: Optional[str] = min(
+            (d for d, s in self.stores.items() if s.kind == "table"),
+            default=None)
+
         # per-effect-type dispatch (engine invariant: extend this table, do
         # not add isinstance chains)
         self._dispatch: Dict[type, Callable] = {
@@ -326,6 +346,8 @@ class SimCloud:
             shim.DsListPrefix: self._perform_ds,
             shim.DsDelete: self._perform_ds,
             shim.Parallel: self._perform_parallel,
+            shim.Sleep: self._perform_sleep,
+            shim.WaitForSignal: self._perform_wait_signal,
         }
         self._ds_ops: Dict[type, Callable] = {
             shim.DsCreate: self._ds_create,
@@ -476,7 +498,12 @@ class SimCloud:
         faas.slots_busy -= 1
         # hand the freed warm slot to the queue head (crashed pops drain on)
         while faas.pending and faas.slots_busy < faas.slots_total:
-            dep, payload, rec = faas.pending.popleft()
+            head, payload, rec = faas.pending.popleft()
+            if head is _RESUME:              # a suspended execution waking up
+                faas.slots_busy += 1
+                self._resume_execution(payload, rec)   # (ex, value)
+                break
+            dep = head
             if not faas.up_at(self.now):
                 rec.status = "crashed"
                 self._retry(dep, payload, rec.attempt)
@@ -495,6 +522,118 @@ class SimCloud:
     def _crash_execution(self, ex: Execution, reason: str) -> None:
         ex.kill()
         self._retry(ex.dep, ex.payload, ex.record.attempt)
+
+    # ---- suspension (Sleep / WaitForSignal) ----------------------------------
+
+    def _suspend(self, ex: Execution) -> None:
+        """Park a live execution without a slot: it leaves the running set
+        (outages cannot kill what is not running), frees its concurrency
+        slot, and stops accruing GB·s — a 1-hour sleep is one heap event."""
+        ex.suspend_t0 = self.now
+        ex.record.status = "suspended"
+        self.running.get(ex.dep.faas, set()).discard(ex)
+        self._release_slot(ex.faas_obj)
+
+    def _wake(self, ex: Execution, value: Any) -> None:
+        """Timer fired / signal arrived: re-acquire a slot and resume.
+        Mirrors :meth:`_start_queued`'s acquisition (warm / mint-cold /
+        queue as a ``_RESUME``-tagged pending entry)."""
+        if not ex.alive:
+            return
+        faas = ex.faas_obj
+        if not faas.up_at(self.now):
+            # outage at wake-up: crash WITHOUT slot release (a suspended
+            # execution holds none) and let at-least-once re-deliver
+            ex.suspended_ms += self.now - ex.suspend_t0
+            ex.alive = False
+            ex.record.t_end = self.now
+            ex.record.status = "crashed"
+            mem = ex.dep.memory_gb or faas.flavor.memory_gb
+            self.bill.charge_execution(
+                faas.cloud, mem,
+                ex.record.t_end - ex.record.t_start - ex.suspended_ms,
+                faas.flavor.price_per_gb_s)
+            self._retry(ex.dep, ex.payload, ex.record.attempt)
+            return
+        if faas.concurrency is not None:
+            if faas.slots_busy < faas.slots_total:
+                faas.slots_busy += 1
+            elif faas.slots_total < faas.concurrency:
+                faas.slots_total += 1
+                faas.slots_busy += 1
+                faas.cold_starts += 1
+                if faas.cold_start_ms > 0.0:
+                    self.after(self._jit(faas.cold_start_ms),
+                               self._resume_execution, ex, value)
+                    return
+            else:
+                faas.pending.append((_RESUME, ex, value))
+                return
+        self._resume_execution(ex, value)
+
+    def _resume_execution(self, ex: Execution, value: Any) -> None:
+        """Resume a suspended execution that now holds a slot."""
+        faas = ex.faas_obj
+        if not ex.alive:
+            self._release_slot(faas)
+            return
+        if not faas.up_at(self.now):       # outage hit during the cold start
+            self._crash_execution(ex, reason="outage")   # kill() frees the slot
+            return
+        ex.suspended_ms += self.now - ex.suspend_t0
+        ex.record.status = "running"
+        self.running.setdefault(ex.dep.faas, set()).add(ex)
+        ex.resume(value)
+
+    def _perform_sleep(self, ex: Execution, effect: shim.Sleep,
+                       ok: Callable, err: Callable) -> None:
+        if effect.ms <= 0:
+            ok(None)
+            return
+        self._suspend(ex)
+        self.after(effect.ms, self._wake, ex, None)
+
+    def _perform_wait_signal(self, ex: Execution, effect: shim.WaitForSignal,
+                             ok: Callable, err: Callable) -> None:
+        scope = effect.scope
+        if not scope:
+            err(shim.ShimError(
+                f"WaitForSignal({effect.name!r}) has no workflow scope"))
+            return
+        key = (scope, effect.name)
+        if key in self._signals:                       # already delivered
+            ok(self._signals[key])
+            return
+        if self._signal_table is not None:             # durable latch (adopted stores)
+            stored = self.stores[self._signal_table].state.items.get(
+                signal_key(scope, effect.name))
+            if stored is not None:
+                self._signals[key] = stored["v"]
+                ok(stored["v"])
+                return
+        self._suspend(ex)
+        self._signal_waiters.setdefault(key, []).append(ex)
+
+    def signal(self, workflow_id: str, name: str, value: Any = True,
+               t: float = 0.0) -> None:
+        """Deliver a named signal to one workflow after ``t`` virtual ms
+        (same delay contract as :meth:`submit`).  First delivery wins; the
+        latch is persisted to the canonical signal table so adopted stores
+        replay it."""
+        if t < 0:
+            raise ValueError(f"signal delay t={t} ms must be >= 0")
+        self.after(t, self._deliver_signal, str(workflow_id), name, value)
+
+    def _deliver_signal(self, wfid: str, name: str, value: Any) -> None:
+        if self._signal_table is not None:
+            st = self.stores[self._signal_table].state
+            if not st.create_if_absent(signal_key(wfid, name), {"v": value}):
+                value = st.get(signal_key(wfid, name))["v"]   # first delivery won
+        key = (wfid, name)
+        self._signals.setdefault(key, value)
+        value = self._signals[key]
+        for ex in self._signal_waiters.pop(key, ()):
+            self._wake(ex, value)
 
     # ---- failure injection ---------------------------------------------------
 
@@ -684,6 +823,12 @@ class SimCloud:
         if n == 0:
             ok([])
             return
+        if any(type(s) in (shim.Sleep, shim.WaitForSignal)
+               for s in effect.effects):
+            # Suspension releases the whole execution's slot — meaningless
+            # for one branch of a concurrent group; reject loudly.
+            err(shim.ShimError("Sleep/WaitForSignal cannot run inside Parallel"))
+            return
         results: List[Any] = [None] * n
         remaining = [n]
 
@@ -717,6 +862,25 @@ class SimCloud:
             n += 1
         self.events_processed += n
         return self.now
+
+    # ---- durable-execution capability surface ---------------------------------
+
+    def journal(self) -> List[TableState]:
+        """The table states :func:`repro.core.durable.resume` scans for
+        started-but-unfinished effect journals (the ``journal`` capability).
+        SimCloud qualifies because :meth:`adopt_stores` carries these states
+        into a fresh instance."""
+        return [s.state for s in self.stores.values() if s.kind == "table"]
+
+    def adopt_stores(self, other: "SimCloud") -> None:
+        """Take over another SimCloud's datastore contents — the fresh-
+        backend-over-the-same-stores idiom durable recovery needs: build a
+        new SimCloud, adopt the dead one's stores, re-``deploy`` the spec,
+        then ``DeployedWorkflow.resume()`` replays the journals."""
+        for did, store in self.stores.items():
+            src = other.stores.get(did)
+            if src is not None:
+                store.state = src.state
 
     # ---- reporting -----------------------------------------------------------------
 

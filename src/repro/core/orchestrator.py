@@ -32,9 +32,12 @@ from typing import Any, Dict, Generator, List, Optional, Sequence, Tuple
 
 from repro.backends import calibration as cal
 from repro.backends import shim
+from repro.backends.datastore import (JOURNAL_DONE, JOURNAL_SEP,
+                                      JOURNAL_START, SIGNAL_NS)
 from repro.backends.shim import (CreateClient, DsAppendGetList, DsCreate, DsDelete,
                                  DsGet, DsListPrefix, DsUpdateBitmap, Invoke,
-                                 InvocationError, Parallel, RunUser, Trace)
+                                 InvocationError, Parallel, RunUser, Sleep, Trace,
+                                 WaitForSignal)
 from repro.core import subgraph as sg
 from repro.core.jlobject import JLObject, fits_quota
 from repro.core.naming import (BITMAP_SUFFIX, IVK_SUFFIX, OUTPUT_SUFFIX,
@@ -83,7 +86,18 @@ class _Planned:
 
 
 def make_handler(view: sg.NodeView):
-    """Bind a NodeView into a SimCloud/local deployment handler."""
+    """Bind a NodeView into a SimCloud/local deployment handler.
+
+    Durable nodes get the event-sourced journal wrapper from
+    :mod:`repro.core.durable` interposed — same effect language, so the
+    choice is invisible to every backend interpreter."""
+    if view.durable:
+        from repro.core.durable import journaled_handle
+
+        def handler(event: Any) -> Generator:
+            return journaled_handle(view, event)
+
+        return handler
 
     def handler(event: Any) -> Generator:
         return handle(view, event)
@@ -103,6 +117,16 @@ def handle(view: sg.NodeView, event: Any) -> Generator:
         output = _unenv(ckp1)
         wfs.output_ckp_hit = True
     else:
+        # Declarative suspension points run before the user function and only
+        # when the output is not yet checkpointed (a retried attempt that
+        # already produced data must not wait again).  Both effects release
+        # the execution's concurrency slot for the whole suspension.
+        if view.wait_signal:
+            yield Trace("suspend")
+            yield WaitForSignal(view.wait_signal, wfs.control.workflow_id)
+        if view.sleep_ms:
+            yield Trace("suspend")
+            yield Sleep(view.sleep_ms)
         yield Trace("unwrap")
         data = yield from _unwrap(jl)
         yield Trace("user_exec")
@@ -419,9 +443,31 @@ def _run_gc(view: sg.NodeView, wfs: WorkflowState) -> Generator:
 
 
 def gc_handler(event: dict) -> Generator:
-    """The GC function deployed once per cloud: prefix-sweep its stores."""
+    """The GC function deployed once per cloud: prefix-sweep its stores.
+
+    Journal-aware: a function id with a started-but-unfinished journal
+    (``…#j/start`` without ``…#j/done``) is live or suspended — sleeping,
+    waiting on a signal, or awaiting crash-recovery replay — so *all* its
+    keys (journal entries, ``-output``/``-ivk`` checkpoints) must survive
+    the sweep, as must the workflow's signal latches while anything is
+    still open.  GC is best-effort, so the skipped keys are reclaimed by a
+    later sweep once the journals close."""
+    start_suffix = JOURNAL_SEP + JOURNAL_START
     for ds in event["stores"]:
         keys = yield DsListPrefix(ds, event["prefix"])
+        if not keys:
+            continue
+        keyset = set(keys)
+        open_fids = [
+            k[: -len(start_suffix)] for k in keys
+            if k.endswith(start_suffix)
+            and k[: -len(start_suffix)] + JOURNAL_SEP + JOURNAL_DONE not in keyset
+        ]
+        if open_fids:
+            signal_prefix = event["prefix"] + SIGNAL_NS + "/"
+            keys = [k for k in keys
+                    if not k.startswith(signal_prefix)
+                    and not any(k.startswith(fid) for fid in open_fids)]
         if keys:
             yield DsDelete(ds, keys)
     return len(event["stores"])

@@ -92,6 +92,10 @@ class FunctionSpec:
     output_store_kind: str = "table"   # "Ds" primitive: table | object
     # execution payload: SimCloud Workload or a real callable (localjax)
     workload: Any = None
+    # declarative suspension points (run before the user function; zero
+    # concurrency slots while suspended — see shim.Sleep/WaitForSignal)
+    sleep_ms: float = 0.0
+    wait_signal: str = ""
 
     @property
     def cloud(self) -> str:
@@ -125,11 +129,13 @@ class WorkflowSpec:
 
     def function(self, name: str, faas: str, *, failover: Sequence[str] = (),
                  memory_gb: Optional[float] = None, workload: Any = None,
-                 output_store_kind: str = "table", entry: bool = False) -> str:
+                 output_store_kind: str = "table", entry: bool = False,
+                 sleep_ms: float = 0.0, wait_signal: str = "") -> str:
         if name in self.functions:
             raise ValueError(f"duplicate function {name}")
         self.functions[name] = FunctionSpec(
-            name, faas, tuple(failover), memory_gb, output_store_kind, workload)
+            name, faas, tuple(failover), memory_gb, output_store_kind, workload,
+            sleep_ms, wait_signal)
         if entry or self.entry is None:
             self.entry = name
         return name
@@ -251,6 +257,11 @@ class NodeView:
     fanin: Optional[FanInInfo]     # set if this node *feeds* a fan-in
     gc: Tuple[GcTarget, ...] = ()  # terminal nodes trigger these
     gc_enabled: bool = True
+    # durable execution (see repro.core.durable): journal every effect
+    durable: bool = False
+    # declarative suspension points, copied from the FunctionSpec
+    sleep_ms: float = 0.0
+    wait_signal: str = ""
 
     @property
     def is_terminal(self) -> bool:
@@ -293,7 +304,9 @@ def apply_placement(spec: WorkflowSpec,
             failover=failover,
             memory_gb=ov["memory_gb"] if "memory_gb" in ov else f.memory_gb,
             output_store_kind=f.output_store_kind,
-            workload=f.workload)
+            workload=f.workload,
+            sleep_ms=f.sleep_ms,
+            wait_signal=f.wait_signal)
     return out
 
 
@@ -386,6 +399,7 @@ def compile_workflow(spec: WorkflowSpec, catalog: Catalog,
             level=levels[name], depth=depths[name], is_entry=(name == spec.entry),
             home_table=home_table, output_ds=output_ds,
             next_funcs=tuple(nexts), fanin=my_fanin, gc_enabled=spec.gc_enabled,
+            sleep_ms=f.sleep_ms, wait_signal=f.wait_signal,
         )
 
     # ---- GC wiring (terminal nodes trigger per-cloud sweeps, §4.4) -----------

@@ -175,6 +175,21 @@ class UniformProcess:
 
 
 @dataclass(frozen=True)
+class SignalArrival:
+    """One scheduled signal delivery for durable workflows: after ``t_ms``,
+    deliver signal ``name`` (carrying ``value``) to the ``index``-th workflow
+    instance of the batch being driven — resolving any ``WaitForSignal(name)``
+    it is suspended on.  Pure data, like :class:`Arrival`: the same list
+    drives SimCloud in virtual time and the local runner in wall-clock time
+    through the backend's ``signal(..., t=)`` delay contract."""
+
+    t_ms: float
+    name: str
+    index: int = 0
+    value: Any = True
+
+
+@dataclass(frozen=True)
 class ClosedLoopProcess:
     """Closed-loop traffic: ``clients`` concurrent clients, each submitting
     its next workflow ``think_time_ms`` after its previous one finished.
@@ -268,6 +283,31 @@ class LoadRunner:
         self.started.extend(new)
         return new
 
+    def submit_signals(self, signals: Sequence[SignalArrival],
+                       started: Optional[Sequence[Tuple[Any, str]]] = None
+                       ) -> int:
+        """Schedule signal deliveries against workflows this runner started
+        (default: everything submitted so far; pass :meth:`submit`'s return
+        value to address one batch).  Each arrival targets the ``index``-th
+        ``(workflow, wfid)`` pair and goes through the backend's optional
+        ``signal`` capability — probed with ``getattr`` per the protocol's
+        capability rule, so a backend without signal delivery raises a clear
+        :class:`repro.backends.shim.CapabilityError`.  Returns the number of
+        deliveries scheduled."""
+        started = self.started if started is None else list(started)
+        send = getattr(self.backend, "signal", None)
+        if not send:
+            raise shim.CapabilityError(
+                f"{type(self.backend).__name__} provides no 'signal' "
+                f"capability, required to deliver SignalArrivals (see the "
+                f"Backend protocol in repro.backends.shim)")
+        if not started:
+            raise ValueError("no started workflows to signal")
+        for s in signals:
+            _, wid = started[s.index % len(started)]
+            send(wid, s.name, s.value, t=s.t_ms)
+        return len(signals)
+
     def drain(self, **run_kwargs: Any) -> Any:
         """Drive the backend until quiescent.  Backend-specific limits
         (``t_max=`` on SimCloud, ``timeout_s=`` on the local runner) pass
@@ -323,9 +363,14 @@ class LoadRunner:
             makespans_ms=makespans, cost_usd=cost,
             duration_ms=max(0.0, t_end - t_start) if k else 0.0)
 
-    def offered(self, schedule: ArrivalSchedule, **run_kwargs: Any) -> LoadPoint:
-        """One open-loop point: submit the whole schedule, drain, collect."""
+    def offered(self, schedule: ArrivalSchedule, *,
+                signals: Sequence[SignalArrival] = (),
+                **run_kwargs: Any) -> LoadPoint:
+        """One open-loop point: submit the whole schedule (plus any
+        ``signals`` addressed into the batch), drain, collect."""
         started = self.submit(schedule)
+        if signals:
+            self.submit_signals(signals, started)
         self.drain(**run_kwargs)
         return self.collect(started)
 

@@ -90,6 +90,29 @@ class DeployedWorkflow:
                 if r.function == function and r.status == "done"]
         return done[-1].result if done else None
 
+    # ---- durable execution (journal replay + signals) ----------------------
+
+    def signal(self, workflow_id: str, name: str, value: Any = True, *,
+               t: float = 0.0) -> None:
+        """Deliver a named signal to one workflow instance, resolving any
+        ``WaitForSignal(name)`` it is (or will be) suspended on.  ``t`` is a
+        delay in ms, same contract as ``start(t=)``.  Requires the optional
+        ``signal`` capability."""
+        send = self._capability(
+            "signal", why="deliver WaitForSignal wake-ups")
+        send(str(workflow_id), name, value, t=t)
+
+    def resume(self) -> list:
+        """Rehydrate every started-but-unfinished journaled attempt on this
+        backend by replaying its effect journal (see
+        ``repro.core.durable.resume``).  The idiom: construct a fresh
+        backend over the same stores (persistent WALs or ``adopt_stores``),
+        re-``deploy`` the spec, then ``resume()`` — suspended workflows
+        replay to their exact suspension point and continue, exactly-once
+        preserved.  Requires the optional ``journal`` capability."""
+        from repro.core.durable import resume as _resume
+        return _resume(self.backend)
+
     # ---- runtime re-planning (outage-aware, trace-calibrated) --------------
 
     def _capability(self, name: str, *, why: str) -> Any:
@@ -151,16 +174,27 @@ class DeployedWorkflow:
 
 def deploy(backend: Backend, spec: sg.WorkflowSpec,
            catalog: Optional[sg.Catalog] = None, *,
-           plan: Any = None) -> DeployedWorkflow:
+           plan: Any = None, durable: bool = False) -> DeployedWorkflow:
     """Compile and deploy ``spec`` onto any Backend-protocol substrate.
     ``plan`` — a ``placement.PlacementPlan`` (or any object with
     ``.overrides()``) — re-places the workflow's nodes before compilation;
     the returned DeployedWorkflow carries the re-placed spec so
-    makespan/bill queries see the effective placement."""
+    makespan/bill queries see the effective placement.
+
+    ``durable=True`` interposes the event-sourced effect journal
+    (:mod:`repro.core.durable`) on every node: each effect's result is
+    committed to the node's home table before the handler resumes, making
+    instances replayable via :meth:`DeployedWorkflow.resume` at the cost of
+    roughly one extra table write per effect.  Strictly opt-in — the
+    default path yields byte-identical effect streams to previous
+    releases."""
     if plan is not None:
         spec = sg.apply_placement(spec, plan.overrides())
     catalog = catalog or backend.catalog()
     views = sg.compile_workflow(spec, catalog)
+    if durable:
+        for view in views.values():
+            view.durable = True
     # ByRedundant replicas are additional deployment targets of the dst fn
     replica_targets: dict = {}
     for view in views.values():

@@ -210,3 +210,123 @@ def test_learn_profiles_works_on_local_records():
     profiles = out["dep"].learn_profiles()
     assert profiles.nodes["a"].samples >= 1
     assert profiles.nodes["b"].out_bytes > 0
+
+
+# ---- durable execution: journal round-trip parity --------------------------
+#
+# deploy(durable=True) + kill + fresh-backend resume() must behave the same
+# on both substrates: the journal is plain datastore state, so recovery is
+# substrate-blind.  (SimCloud dies via an unrecoverable outage; LocalRunner
+# via a crash policy that exhausts the retry budget.  The real-SIGKILL
+# variant is the `benchmarks/durability_smoke.py` CI gate.)
+
+
+def durable_seq_spec(calls):
+    spec = WorkflowSpec("p-dur", gc=False)
+    spec.function("a", AWS, workload=Workload(fn=lambda x: x + 1))
+    spec.function("b", ALI,
+                  workload=Workload(fn=lambda x: calls.append(x) or x * 2))
+    spec.sequence("a", "b")
+    return spec
+
+
+def _interrupted_durable_run(kind, calls):
+    """Start a durable run and kill it mid-flight; return (backend, wid)."""
+    if kind == "sim":
+        backend = SimCloud(seed=0)
+        dep = wf.deploy(backend, durable_seq_spec(calls), durable=True)
+        backend.schedule_outage("aliyun", 5.0, float("inf"))
+        wid = dep.start(3)
+        backend.run()
+    else:
+        backend = LocalRunner(concurrency=2, max_requeues=1,
+                              retry_backoff_ms=5.0)
+        dep = wf.deploy(backend, durable_seq_spec(calls), durable=True)
+        backend.crash_policy = (lambda ex, eff:
+                                ex.record.function == "b"
+                                and ex.effect_index >= 4)
+        wid = dep.start(3, workflow_id="p-dur-000000")
+        backend.run(timeout_s=30.0)
+        backend.crash_policy = None
+    assert backend.dropped, "the interruption must exhaust the retry budget"
+    assert dep.result_of(wid, "b") is None
+    return backend, wid
+
+
+def _fresh_over_same_stores(kind, old):
+    backend = SimCloud(seed=1) if kind == "sim" else LocalRunner(concurrency=2)
+    backend.adopt_stores(old)
+    return backend
+
+
+@pytest.mark.parametrize("kind", ["sim", "local"])
+def test_journal_round_trip_resumes_identically(kind):
+    """Interrupt → fresh backend over the same stores → resume(): the same
+    recovery idiom completes the workflow on either substrate, exactly-once."""
+    calls = []
+    old, wid = _interrupted_durable_run(kind, calls)
+    fresh = _fresh_over_same_stores(kind, old)
+    dep = wf.deploy(fresh, durable_seq_spec(calls), durable=True)
+    fids = dep.resume()
+    assert fids and all(f.startswith(wid + "/") for f in fids), fids
+    if kind == "sim":
+        fresh.run()
+    else:
+        fresh.run(timeout_s=30.0)
+        fresh.close()
+    assert dep.result_of(wid, "b") == 8
+    assert calls == [4], "user function ran exactly once across both lives"
+    # second-generation resume: the journal is closed, nothing left
+    third = _fresh_over_same_stores(kind, fresh)
+    dep3 = wf.deploy(third, durable_seq_spec(calls), durable=True)
+    assert dep3.resume() == []
+
+
+@pytest.mark.parametrize("kind", ["sim", "local"])
+def test_completed_durable_run_has_nothing_to_resume(kind):
+    """A durable run that finishes cleanly leaves a closed journal: resume()
+    on a fresh backend over the same stores is a no-op on both substrates."""
+    calls = []
+    if kind == "sim":
+        backend = SimCloud(seed=0)
+        dep = wf.deploy(backend, durable_seq_spec(calls), durable=True)
+        wid = dep.start(3)
+        backend.run()
+    else:
+        backend = LocalRunner(concurrency=2)
+        dep = wf.deploy(backend, durable_seq_spec(calls), durable=True)
+        wid = dep.start(3)
+        backend.run(timeout_s=30.0)
+    assert dep.result_of(wid, "b") == 8
+    assert calls == [4]
+    fresh = _fresh_over_same_stores(kind, backend)
+    dep2 = wf.deploy(fresh, durable_seq_spec(calls), durable=True)
+    assert dep2.resume() == []
+
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_durable_mode_preserves_parity_semantics(case):
+    """The whole workflow zoo still satisfies the parity contract with
+    journaling on: same done-sets, same results, zero drops — the journal
+    must be an invisible layer on a healthy run."""
+    spec, input_value, terminal, expected = CASES[case]()
+    for kind in ("sim", "local"):
+        backend = SimCloud(seed=0) if kind == "sim" else LocalRunner()
+        dep = wf.deploy(backend, spec, durable=True)
+        wid = dep.start(input_value)
+        if kind == "sim":
+            backend.run()
+        else:
+            backend.run(timeout_s=60.0)
+        assert dep.result_of(wid, terminal) == expected, kind
+        assert not backend.dropped, kind
+
+
+def test_legacy_sim_alias_still_points_at_backend():
+    """`DeployedWorkflow.sim` predates the Backend protocol; it must remain
+    a pure alias of `.backend` on every substrate (guard for the sweep that
+    moved all call sites onto `.backend`)."""
+    for backend in (SimCloud(seed=0), LocalRunner()):
+        spec, _, _, _ = seq_spec()
+        dep = wf.deploy(backend, spec)
+        assert dep.sim is dep.backend is backend

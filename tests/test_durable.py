@@ -1,0 +1,361 @@
+"""Durable execution: event-sourced effect journal, replay recovery, and
+Sleep/WaitForSignal suspension — on both substrates.
+
+The contract under test (docs/backends.md §4, ``repro/core/durable.py``):
+
+- ``deploy(..., durable=True)`` commits every effect result to the node's
+  home table *before* the generator resumes; a fresh backend over the same
+  stores replays the journal to the exact suspension point with live side
+  effects suppressed — exactly-once across the crash boundary.
+- ``Sleep(ms)`` / ``WaitForSignal(name)`` park an attempt without holding a
+  concurrency slot: O(1) events for an hour-long virtual-time sleep on
+  SimCloud, a freed worker thread on LocalRunner.
+- The ``journal``/``signal`` capabilities are optional and probed; GC never
+  reclaims keys of a started-but-unfinished journal.
+
+The kill -9 variant of the recovery path is the CI gate
+``benchmarks/durability_smoke.py``; randomized crash schedules live in
+``tests/test_exactly_once_prop.py``.
+"""
+
+import time
+from collections import Counter
+
+import pytest
+
+from repro.backends import shim
+from repro.backends.datastore import TableState
+from repro.backends.localjax import LocalRunner
+from repro.backends.simcloud import SimCloud, Workload
+from repro.core import workflow as wf
+from repro.core.orchestrator import gc_handler
+from repro.core.subgraph import WorkflowSpec
+
+AWS = "aws/lambda"
+ALI = "aliyun/fc"
+
+
+def two_stage_spec(calls, *, sleep_ms=0.0, wait_signal="", failover=()):
+    """a (×2) → b (+10); b's user executions are counted in ``calls``."""
+    spec = WorkflowSpec("dur", gc=False)
+    spec.function("a", AWS, workload=Workload(fn=lambda e: e * 2))
+    spec.function("b", ALI, failover=list(failover), sleep_ms=sleep_ms,
+                  wait_signal=wait_signal,
+                  workload=Workload(fn=lambda e: calls.append(e) or e + 10))
+    spec.sequence("a", "b")
+    return spec
+
+
+# ==========================================================================
+# SimCloud: replay recovery, zero-slot suspension, signals
+# ==========================================================================
+
+
+def test_simcloud_outage_then_fresh_backend_resume_exactly_once():
+    """Kill a durable workflow via a permanent outage, rehydrate it on a
+    *fresh* SimCloud over the same stores: replay reaches the identical
+    final result and the user function still ran exactly once."""
+    calls = []
+    sim = SimCloud(seed=4)
+    dep = wf.deploy(sim, two_stage_spec(calls), durable=True)
+    sim.schedule_outage("aliyun", 5.0, float("inf"))
+    wid = dep.start(3)
+    sim.run()
+    assert dep.result_of(wid, "b") is None       # b never survived the outage
+    assert sim.dropped
+
+    fresh = SimCloud(seed=99)                    # different seed on purpose
+    fresh.adopt_stores(sim)
+    dep2 = wf.deploy(fresh, two_stage_spec(calls), durable=True)
+    fids = dep2.resume()
+    assert fids, "an open journal must be rehydrated"
+    fresh.run()
+    assert dep2.result_of(wid, "b") == 16
+    assert calls == [6], "exactly one live user execution across both lives"
+
+    # the journal round-trip is closed: nothing left to resume
+    third = SimCloud(seed=1)
+    third.adopt_stores(fresh)
+    dep3 = wf.deploy(third, two_stage_spec(calls), durable=True)
+    assert dep3.resume() == []
+
+
+def test_simcloud_hour_long_sleep_is_o1_events_and_zero_slots():
+    """A 1-hour virtual sleep costs O(1) heap events and holds no slot:
+    with concurrency=1, a second workflow runs to completion *during* the
+    suspension."""
+    calls = []
+    sim = SimCloud(seed=0, concurrency={"aliyun/fc": 1})
+    sleeper = wf.deploy(sim, two_stage_spec(calls, sleep_ms=3_600_000.0),
+                        durable=True)
+    quick_spec = WorkflowSpec("quick", gc=False)
+    quick_spec.function("q", ALI, workload=Workload(fn=lambda e: e + 1))
+    quick = wf.deploy(sim, quick_spec)
+
+    ws = sleeper.start(1)
+    wq = quick.start(0, t=1000.0)                # arrives mid-suspension
+    sim.run()
+
+    assert sleeper.result_of(ws, "b") == 12
+    assert quick.result_of(wq, "q") == 1
+    q_done = [r for r in quick.executions(wq) if r.status == "done"]
+    assert max(r.t_end for r in q_done) < 3_600_000.0, \
+        "the quick workflow must not wait behind the sleeping one's slot"
+    assert sim.now >= 3_600_000.0
+    assert sim.events_processed < 200, \
+        f"hour-long sleep must be O(1) events, saw {sim.events_processed}"
+
+
+def test_simcloud_wait_signal_gates_completion_and_latch_is_first_wins():
+    calls = []
+    sim = SimCloud(seed=0)
+    dep = wf.deploy(sim, two_stage_spec(calls, wait_signal="go"), durable=True)
+    wid = dep.start(30)
+    sim.run()
+    assert dep.result_of(wid, "b") is None       # suspended, not failed
+    assert any(r.status == "suspended" for r in dep.executions(wid))
+    assert not sim.dropped
+
+    dep.signal(wid, "go")
+    dep.signal(wid, "go", value="late loser")    # first delivery wins
+    sim.run()
+    assert dep.result_of(wid, "b") == 70
+    assert calls == [60]
+
+
+def test_signal_delay_contract_honored_in_virtual_time():
+    calls = []
+    sim = SimCloud(seed=0)
+    dep = wf.deploy(sim, two_stage_spec(calls, wait_signal="go"), durable=True)
+    wid = dep.start(1)
+    dep.signal(wid, "go", t=5_000.0)
+    sim.run()
+    assert dep.result_of(wid, "b") == 12
+    b_done = [r for r in dep.executions(wid)
+              if r.function == "b" and r.status == "done"]
+    assert min(r.t_end for r in b_done) >= 5_000.0
+
+
+# ==========================================================================
+# LocalRunner: suspension on real threads, WAL recovery
+# ==========================================================================
+
+
+def test_local_sleep_releases_the_worker_thread():
+    """concurrency=1: a second workflow on the same FaaS completes while the
+    first is parked mid-sleep — suspension holds no worker."""
+    spec = WorkflowSpec("lslp", gc=False)
+    spec.function("s", AWS, sleep_ms=600.0,
+                  workload=Workload(fn=lambda e: e + 1))
+    quick_spec = WorkflowSpec("lq", gc=False)
+    quick_spec.function("q", AWS, workload=Workload(fn=lambda e: e * 3))
+
+    runner = LocalRunner(concurrency=1)
+    sleeper = wf.deploy(runner, spec, durable=True)
+    quick = wf.deploy(runner, quick_spec)
+    t0 = time.monotonic()
+    ws = sleeper.start(1)
+    wq = quick.start(2, t=100.0)
+    runner.run(timeout_s=30.0)
+    elapsed_ms = (time.monotonic() - t0) * 1e3
+
+    assert sleeper.result_of(ws, "s") == 2
+    assert quick.result_of(wq, "q") == 6
+    q_rec = [r for r in quick.executions(wq) if r.status == "done"][0]
+    assert q_rec.t_end - q_rec.t_queued < 450.0, \
+        "quick workflow must not queue behind the 600 ms suspension"
+    assert elapsed_ms >= 550.0                       # the sleep was honored
+
+
+def test_local_wal_crash_resume_exactly_once(tmp_path):
+    """Crash every attempt of b (retry budget exhausted, journal left open),
+    then resume a fresh runner over the same WAL directory: identical final
+    result, user function executed exactly once overall."""
+    calls = []
+    store_dir = str(tmp_path / "wal")
+
+    r1 = LocalRunner(concurrency=2, max_requeues=1, retry_backoff_ms=5.0,
+                     store_dir=store_dir)
+    dep1 = wf.deploy(r1, two_stage_spec(calls), durable=True)
+    r1.crash_policy = (lambda ex, eff:
+                       ex.record.function == "b" and ex.effect_index >= 4)
+    wid = dep1.start(3, workflow_id="dur-000000")
+    r1.run(timeout_s=30.0)
+    assert r1.drop_count >= 1
+    assert dep1.result_of(wid, "b") is None
+    r1.close()
+
+    r2 = LocalRunner(concurrency=2, store_dir=store_dir)
+    dep2 = wf.deploy(r2, two_stage_spec(calls), durable=True)
+    fids = dep2.resume()
+    assert fids
+    r2.run(timeout_s=30.0)
+    r2.close()
+    assert dep2.result_of(wid, "b") == 16
+    assert calls == [6]
+
+
+def test_local_signal_latch_survives_process_boundary(tmp_path):
+    """Signal delivered, then the runner 'dies' before the waiter wakes:
+    the WAL-persisted latch lets the resumed attempt observe it."""
+    calls = []
+    store_dir = str(tmp_path / "wal")
+    spec = lambda: two_stage_spec(calls, wait_signal="go")  # noqa: E731
+
+    r1 = LocalRunner(concurrency=2, max_requeues=0, retry_backoff_ms=5.0,
+                     store_dir=store_dir)
+    dep1 = wf.deploy(r1, spec(), durable=True)
+    # crash b after the journal opens but before it reaches the wait:
+    # journal open, user code never ran
+    r1.crash_policy = (lambda ex, eff:
+                       ex.record.function == "b" and ex.effect_index >= 2)
+    wid = dep1.start(5, workflow_id="dur-000000")
+    r1.run(timeout_s=30.0)
+    dep1.signal(wid, "go")                     # latch lands in the WAL
+    r1.close()
+
+    r2 = LocalRunner(concurrency=2, store_dir=store_dir)
+    dep2 = wf.deploy(r2, spec(), durable=True)
+    assert dep2.resume()
+    r2.run(timeout_s=30.0)
+    r2.close()
+    assert dep2.result_of(wid, "b") == 20
+    assert calls == [10]
+
+
+# ==========================================================================
+# Capability probes, Parallel guard, GC awareness
+# ==========================================================================
+
+
+def test_resume_without_journal_capability_is_a_clear_error():
+    """An in-memory LocalRunner cannot replay (its journal dies with the
+    process): resume() must raise CapabilityError naming the capability."""
+    calls = []
+    runner = LocalRunner()
+    dep = wf.deploy(runner, two_stage_spec(calls), durable=True)
+    with pytest.raises(shim.CapabilityError, match="journal"):
+        dep.resume()
+
+
+def test_signal_without_capability_is_a_clear_error():
+    calls = []
+    sim = SimCloud(seed=0)
+    dep = wf.deploy(sim, two_stage_spec(calls), durable=True)
+    dep.backend = object()                      # a backend with no signal()
+    with pytest.raises(shim.CapabilityError, match="signal"):
+        dep.signal("w", "go")
+
+
+@pytest.mark.parametrize("kind", ["sim", "local"])
+def test_suspension_inside_parallel_is_rejected(kind):
+    """Suspension is attempt-granular: Sleep/WaitForSignal inside Parallel
+    must fail loudly on every backend, not strand sibling branches."""
+    backend = SimCloud(seed=0) if kind == "sim" else LocalRunner(max_requeues=0)
+
+    def handler(event):
+        yield shim.Parallel([shim.Sleep(5.0), shim.Now()])
+
+    backend.deploy(shim.Deployment(function="bad", faas=AWS, handler=handler,
+                                   workload=shim.Workload()))
+    backend.submit(AWS, "bad", {"workflow_id": "p", "input": 0})
+    if kind == "sim":
+        backend.run()
+    else:
+        backend.run(timeout_s=30.0)
+    assert not any(r.status == "done" for r in backend.executions_of("bad"))
+
+
+def _drive_gc(state: TableState, prefix: str):
+    """Interpret gc_handler's effect stream against one raw table state."""
+    gen = gc_handler({"prefix": prefix, "stores": [state.name]})
+    value = None
+    while True:
+        try:
+            eff = gen.send(value)
+        except StopIteration:
+            return
+        if type(eff) is shim.DsListPrefix:
+            value = state.list_prefix(eff.prefix)
+        elif type(eff) is shim.DsDelete:
+            value = state.delete(eff.keys)
+        else:
+            value = None
+
+
+def test_gc_spares_open_journals_and_signal_latches():
+    """GC must not reclaim a suspended workflow: keys of any function id
+    with a start-but-no-done journal — and the workflow's signal latches —
+    survive the sweep; a later sweep reclaims them once the journal closes."""
+    st = TableState("aws/dynamodb")
+    # b_0 is suspended (open journal); a_0 completed (closed journal)
+    for k in ["w1/a_0-output", "w1/a_0#j/start", "w1/a_0#j/e000001",
+              "w1/a_0#j/done",
+              "w1/b_0-output", "w1/b_0#j/start", "w1/b_0#j/e000001",
+              "w1/__signal__/go"]:
+        st.create_if_absent(k, {"v": 1})
+    _drive_gc(st, "w1/")
+    remaining = set(st.items)
+    assert remaining == {"w1/b_0-output", "w1/b_0#j/start",
+                         "w1/b_0#j/e000001", "w1/__signal__/go"}, remaining
+
+    # the journal closes → the next best-effort sweep reclaims everything
+    st.create_if_absent("w1/b_0#j/done", {"r": None})
+    _drive_gc(st, "w1/")
+    assert not st.items
+
+
+def test_durable_end_to_end_gc_reclaims_all_but_the_open_terminal():
+    """End-to-end: a durable workflow with GC enabled completes and the
+    sweep reclaims every upstream checkpoint/journal key.  The terminal
+    attempt's own journal is necessarily still open when it runs the sweep
+    (its done marker lands after), so only terminal-fid keys may survive —
+    that is exactly the journal-awareness that keeps suspended workflows
+    recoverable."""
+    calls = []
+    spec = two_stage_spec(calls)
+    spec.gc_enabled = True
+    sim = SimCloud(seed=0)
+    dep = wf.deploy(sim, spec, durable=True)
+    wid = dep.start(3)
+    sim.run()
+    assert dep.result_of(wid, "b") == 16
+    leftovers = [k for s in sim.stores.values() for k in s.state.items
+                 if k.startswith(wid + "/")]
+    assert leftovers, "the open terminal journal must have been spared"
+    stray = [k for k in leftovers if not k.startswith(f"{wid}/b_")]
+    assert not stray, stray
+
+
+# ==========================================================================
+# Replay determinism: completed journals are inert
+# ==========================================================================
+
+
+@pytest.mark.parametrize("kind", ["sim", "local"])
+def test_completed_journal_replays_to_identical_results(kind):
+    """Re-delivering a *completed* durable attempt (at-least-once is allowed
+    to do that at any time) replays entirely from the journal: same result,
+    no new live user execution."""
+    calls = []
+    if kind == "sim":
+        backend = SimCloud(seed=0)
+    else:
+        backend = LocalRunner(concurrency=2)
+    dep = wf.deploy(backend, two_stage_spec(calls), durable=True)
+    wid = dep.start(3)
+    run_kw = {} if kind == "sim" else {"timeout_s": 30.0}
+    backend.run(**run_kw)
+    assert dep.result_of(wid, "b") == 16
+    assert calls == [6]
+
+    # duplicate delivery of the whole entry function: pure replay
+    backend.submit(AWS, "a", {"workflow_id": wid, "input": 3})
+    backend.run(**run_kw)
+    done = Counter(r.function for r in dep.executions(wid)
+                   if r.status == "done")
+    assert calls == [6], "replay must suppress the live user execution"
+    assert done["a"] >= 2 and done["b"] >= 1
+    results = {r.result for r in dep.executions(wid)
+               if r.function == "b" and r.status == "done"}
+    assert results == {16}

@@ -288,3 +288,68 @@ def test_throughput_sweep_reproduces_pre_refactor_anchor():
     point = sweep.run_point(30.0, 500)
     for key, expected in ANCHOR.items():
         assert point[key] == expected, (key, point[key], expected)
+
+
+# ==========================================================================
+# Signal arrivals (durable-workflow traffic)
+# ==========================================================================
+
+
+def wait_signal_spec(name="traffic-sig"):
+    spec = WorkflowSpec(name, gc=False)
+    spec.function("a", AWS, workload=Workload(fixed_ms=1.0, fn=lambda x: x + 1))
+    spec.function("b", ALI, wait_signal="go",
+                  workload=Workload(fixed_ms=1.0, fn=lambda x: x * 2))
+    spec.sequence("a", "b")
+    return spec
+
+
+def test_signal_arrivals_wake_a_batch_of_suspended_workflows():
+    """SignalArrivals compose with an arrival schedule: every instance of
+    the batch parks on WaitForSignal and is woken by its addressed delivery
+    through the backend's ``signal(t=)`` delay contract."""
+    sim = SimCloud(seed=0)
+    dep = wf.deploy(sim, wait_signal_spec(), durable=True)
+    runner = traffic.LoadRunner([dep], input_value=3)
+    schedule = traffic.ArrivalSchedule.from_times([0.0, 10.0, 20.0])
+    signals = [traffic.SignalArrival(2_000.0 + 100.0 * i, "go", index=i)
+               for i in range(3)]
+    point = runner.offered(schedule, signals=signals)
+    assert point.submitted == 3
+    assert point.completed == 3
+    assert point.dropped == 0
+    # every makespan includes its wait-for-signal dwell
+    assert all(m >= 1_500.0 for m in point.makespans_ms), point.makespans_ms
+
+
+def test_signal_arrivals_without_signals_leave_the_batch_suspended():
+    """Control for the test above: no deliveries, no completions — and no
+    drops either (suspension is not failure)."""
+    sim = SimCloud(seed=0)
+    dep = wf.deploy(sim, wait_signal_spec(), durable=True)
+    runner = traffic.LoadRunner([dep], input_value=3)
+    point = runner.offered(traffic.ArrivalSchedule.from_times([0.0, 10.0]))
+    assert point.submitted == 2
+    assert point.dropped == 0
+    for d, wid in runner.started:
+        assert d.result_of(wid, "b") is None, "b must still be parked"
+        assert any(r.status == "suspended" for r in d.executions(wid))
+
+
+def test_submit_signals_probes_the_signal_capability():
+    """A backend without ``signal`` must produce a CapabilityError naming
+    the capability (the protocol's probe rule), never an AttributeError."""
+    from types import SimpleNamespace
+    backend = SimpleNamespace(dropped=[])         # no .signal
+    runner = traffic.LoadRunner([SimpleNamespace(backend=backend)])
+    with pytest.raises(shim.CapabilityError, match="signal"):
+        runner.submit_signals([traffic.SignalArrival(0.0, "go")],
+                              started=[(None, "w-0")])
+
+
+def test_submit_signals_rejects_an_empty_batch():
+    sim = SimCloud(seed=0)
+    dep = wf.deploy(sim, wait_signal_spec(), durable=True)
+    runner = traffic.LoadRunner([dep])
+    with pytest.raises(ValueError):
+        runner.submit_signals([traffic.SignalArrival(0.0, "go")])
