@@ -11,6 +11,10 @@ if [ "$#" -eq 0 ]; then
     python examples/quickstart.py
     # load-regression gate: bounded wall-clock, zero drops at sub-capacity load
     python benchmarks/throughput_sweep.py --smoke
+    # prefetch gate: speculative-transfer arm must strictly improve p50/p99
+    # at the pinned smoke point (>= 2 of 4 paper workflows better, never
+    # more drops) while the prefetch-off baseline stays pinned
+    python benchmarks/throughput_sweep.py --prefetch --smoke
     # local-backend gate: one paper workflow end-to-end on the concurrent
     # real-execution backend (wall budget, zero drops)
     python benchmarks/run.py --backend local --smoke

@@ -226,7 +226,7 @@ class LocalRunner:
     def __init__(self, config: Optional[dict] = None, *,
                  concurrency: Union[int, Mapping[str, int]] = 8,
                  max_requeues: int = 8, retry_backoff_ms: float = 25.0,
-                 store_dir: Optional[str] = None):
+                 store_dir: Optional[str] = None, prefetch: bool = True):
         self._config = config or cal.default_jointcloud()
         self.store_dir = store_dir
         if store_dir is not None:
@@ -270,6 +270,16 @@ class LocalRunner:
             (d for d, s in self.stores.items() if s.kind == "table"),
             default=None)
 
+        # speculative pushes (the ``prefetch`` capability, same falsy-
+        # attribute probe idiom as ``journal``): genuine worker threads copy
+        # a *committed* checkpoint into a staging cache at upstream-dispatch
+        # time; the consumer's DsGet joins the push (event wait) instead of
+        # hitting the store.  The cache is read-only w.r.t. table state — a
+        # push can never write through to a store, so a prefetched-but-
+        # crashed attempt cannot leak partial inputs past the journal.
+        self.prefetch: bool = bool(prefetch)
+        self._prefetch_cache: Dict[Tuple[str, str], dict] = {}
+
         self.deployments: Dict[Tuple[str, str], Deployment] = {}
         self.records: List[ExecutionRecord] = []
         self.dropped: List[Tuple[str, str, Any]] = []   # (faas, function, payload)
@@ -311,6 +321,7 @@ class LocalRunner:
             shim.DsDelete: self._perform_ds,
             shim.Sleep: self._perform_sleep,
             shim.WaitForSignal: self._perform_wait_signal,
+            shim.Prefetch: self._perform_prefetch,
         }
 
     # ---- Backend protocol: deployment / invocation -------------------------
@@ -533,7 +544,10 @@ class LocalRunner:
             return
         except (_Killed, shim.ShimError):
             # the attempt died between effects (outage/injected crash) or a
-            # shim error escaped the handler: at-least-once redelivery
+            # shim error escaped the handler: at-least-once redelivery.
+            # In-flight speculative pushes it issued are aborted first, so
+            # nothing from the dead attempt outlives the journal.
+            self._abort_prefetches(rec.exec_id)
             rec.t_end = _now_ms()
             rec.status = "crashed"
             self._retry_or_drop(faas, rec)
@@ -646,6 +660,72 @@ class LocalRunner:
             raise fatal[0]
         return results
 
+    def _perform_prefetch(self, ex: LocalExecution,
+                          effect: shim.Prefetch) -> bool:
+        """Speculative push (the ``prefetch`` capability): a worker thread
+        copies the committed value of ``ds[key]`` into the staging cache,
+        started now — at upstream-dispatch time — and joined by the
+        consumer's DsGet.  Semantics-preserving by construction:
+
+        * the push reads the *committed* store value (§4.1 conditional
+          creates make it immutable), so the cache can never go stale and
+          never holds anything the journal has not seen;
+        * idempotent per ``(ds, key)`` — a retried attempt re-yielding the
+          push is a no-op (no double work);
+        * abort-on-crash — entries issued by an attempt that dies before
+          the copy lands are marked aborted and evicted
+          (:meth:`_abort_prefetches`), so the consumer falls back to the
+          authoritative store and a later retry may push again.
+        """
+        if not self.prefetch:
+            raise shim.CapabilityError(
+                "prefetch disabled on this LocalRunner "
+                "(constructed with prefetch=False)")
+        st = self.stores.get(effect.ds)
+        if st is None:
+            raise shim.DataStoreError(f"unknown datastore {effect.ds}")
+        ckey = (effect.ds, effect.key)
+        with self._lock:
+            if ckey in self._prefetch_cache:
+                return False                 # duplicate push: no-op
+            ent = {"event": threading.Event(), "value": None, "ok": False,
+                   "aborted": False, "exec": ex.record.exec_id}
+            self._prefetch_cache[ckey] = ent
+
+        def push() -> None:
+            value = st.get(effect.key)
+            with self._lock:
+                if ent["aborted"]:
+                    return                   # issuer crashed mid-push
+                if value is None:
+                    # not committed yet (mis-ordered directive): evict so a
+                    # later push can retry; consumers use the store
+                    self._prefetch_cache.pop(ckey, None)
+                else:
+                    ent["value"] = value
+                    ent["ok"] = True
+            ent["event"].set()
+
+        th = threading.Thread(target=push, daemon=True,
+                              name=f"prefetch-{effect.ds}-{effect.key}")
+        th.start()
+        return True
+
+    def _abort_prefetches(self, exec_id: int) -> None:
+        """Discard in-flight pushes issued by a crashed attempt: mark them
+        aborted (the push thread then drops its copy) and evict, so
+        consumers read the authoritative store and a retried attempt can
+        push again.  Pushes that already landed stay — they hold a
+        committed, immutable value, which a crash cannot invalidate."""
+        with self._lock:
+            stale = [(k, e) for k, e in self._prefetch_cache.items()
+                     if e["exec"] == exec_id and not e["ok"]]
+            for k, e in stale:
+                e["aborted"] = True
+                del self._prefetch_cache[k]
+        for _, e in stale:
+            e["event"].set()                 # release any joined consumer
+
     def _perform_ds(self, ex: LocalExecution, effect: shim.Effect) -> Any:
         st = self.stores.get(getattr(effect, "ds", None))
         if st is None:
@@ -655,6 +735,17 @@ class LocalRunner:
         if klass is shim.DsCreate:
             return st.create_if_absent(effect.key, effect.value)
         if klass is shim.DsGet:
+            # join an in-flight speculative push first (the consume-time
+            # barrier); the empty-cache short-circuit keeps prefetch-off
+            # reads byte-identical to previous releases
+            if self._prefetch_cache:
+                with self._lock:
+                    ent = self._prefetch_cache.get((effect.ds, effect.key))
+                if ent is not None:
+                    ent["event"].wait(timeout=5.0)
+                    if ent["ok"]:
+                        return ent["value"]
+                    # aborted / timed out: authoritative fallback below
             return st.get(effect.key)
         if klass is shim.DsAppendGetList:
             return st.append_and_get_list(effect.key, effect.items)

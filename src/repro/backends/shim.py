@@ -203,6 +203,39 @@ class RunUser(Effect):
 
 
 @dataclass
+class Prefetch(Effect):
+    """Speculatively push ``ds[key]`` toward cloud ``dest`` *now* — before
+    the downstream consumer asks for it — so the eventual ``DsGet`` pays
+    only the residual wire time (GeoFF-style data pre-fetching).
+
+    Contract (the ``prefetch`` capability; see ``docs/backends.md``):
+
+    * **flow-open**: the push is a real transfer that opens a flow through
+      the substrate's contention accounting at yield time, stretching
+      concurrent flows honestly — never free bandwidth;
+    * **best-effort hint**: it must not change workflow *semantics* — the
+      consuming ``DsGet`` still returns the authoritative store value, and
+      a lost/aborted push degrades to a plain on-demand transfer;
+    * **mis-prediction fallback**: ``size_bytes`` is the planner's
+      prediction; when the actual value is larger, the consumer pays a
+      residual on-demand transfer for the shortfall;
+    * **abort-on-crash**: a push issued by an attempt that later crashes
+      must be cleanly discarded — it may never leak partial inputs past
+      the §4.1 checkpoints / durable journal;
+    * **idempotent**: re-yielding (at-least-once retry) for the same
+      ``(ds, key, dest)`` must not double-transfer or double-bill.
+
+    Result: ``True`` iff a push was started (``False``: duplicate,
+    intra-cloud, or value not yet present).
+    """
+
+    ds: str
+    key: str
+    dest: str               # destination *cloud* name
+    size_bytes: int = 0     # predicted wire size (0: size at push time)
+
+
+@dataclass
 class Parallel(Effect):
     """Execute sub-effects concurrently (the 10-thread fan-out of §4.1.2).
 
@@ -432,7 +465,10 @@ class Workload:
     flavor a non-accel stage runs at CPU-reference speed — video splitting
     does not get 15× faster by renting a GPU.  ``out_bytes`` is a static
     hint of the output's wire size, consumed by the placement planner
-    (runtime sizing still uses the actual value via ``estimate_size``).
+    (runtime sizing still uses the actual value via ``estimate_size``);
+    ``out_bytes_std`` is the declared *uncertainty* of that hint (std-dev),
+    the confidence figure the prefetch planner gates speculation on —
+    ``None`` means "exact" (the default for static hints).
 
     Interpreters use the two halves differently: SimCloud advances virtual
     time by ``duration_ms`` and calls ``fn`` for the value; the local
@@ -444,6 +480,7 @@ class Workload:
     fn: Optional[Callable[[Any], Any]] = None
     out_bytes: Optional[int] = None
     accel: bool = True
+    out_bytes_std: Optional[float] = None
 
     def duration_ms(self, flavor: cal.Flavor) -> float:
         """Reference duration on ``flavor``: the compute half scales with
@@ -558,6 +595,16 @@ class Backend(Protocol):
       ``t`` is a delay in ms, same contract as ``submit(t=)``.  Backends
       without it get a :class:`CapabilityError` from
       ``DeployedWorkflow.signal()`` and ``traffic.LoadRunner``.
+
+    The speculative-transfer capability:
+
+    * ``prefetch`` — truthy iff the backend interprets the
+      :class:`Prefetch` effect per its contract (flow-open accounting,
+      mis-prediction residual fallback, abort-on-crash, idempotent pushes;
+      see ``docs/backends.md`` §"Prefetch").  Probed by
+      ``workflow.deploy(prefetch=True)``, which degrades to a
+      :class:`CapabilityError` on backends without it — handlers on a
+      non-capable backend never yield :class:`Prefetch`.
     """
 
     deployments: Dict[Tuple[str, str], Deployment]

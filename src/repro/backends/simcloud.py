@@ -320,6 +320,15 @@ class SimCloud:
         self.crash_policy: Optional[Callable[[Execution, shim.Effect], bool]] = None
         self.dropped: List[Tuple[str, str, Any]] = []   # (faas, function, payload)
 
+        # Speculative-transfer support (the ``prefetch`` capability): pushes
+        # in flight / landed, keyed (ds, key, dest_cloud) — a duplicate
+        # Prefetch (at-least-once retry) is a no-op against this ledger, and
+        # ``_ds_get`` at the destination pays only the residual wire time.
+        # Empty unless handlers yield Prefetch, so prefetch-off timelines
+        # take zero extra heap events and zero extra RNG draws.
+        self.prefetch = True
+        self._prefetch_ledger: Dict[Tuple[str, str, str], Dict[str, float]] = {}
+
         # Durable-execution support.  Signals are per-workflow latches: the
         # in-memory map serves live waits, the durable copy (written to the
         # canonical signal table — smallest table-store id, a deterministic
@@ -348,6 +357,7 @@ class SimCloud:
             shim.Parallel: self._perform_parallel,
             shim.Sleep: self._perform_sleep,
             shim.WaitForSignal: self._perform_wait_signal,
+            shim.Prefetch: self._perform_prefetch,
         }
         self._ds_ops: Dict[type, Callable] = {
             shim.DsCreate: self._ds_create,
@@ -729,6 +739,112 @@ class SimCloud:
                    effect.payload, 0)
         self.after(accept + rtt / 2, ok, True)
 
+    # -- prefetch (speculative cross-cloud push) ----------------------------------
+
+    def _perform_prefetch(self, ex: Execution, effect: shim.Prefetch,
+                          ok: Callable[[Any], None],
+                          err: Callable[[BaseException], None]) -> None:
+        """Open a *real* flow for ``ds[key]`` toward cloud ``dest`` now,
+        ahead of the consumer's DsGet (the ``prefetch`` capability).
+
+        The push is modelled store-side: the committed value streams from
+        the store's cloud to the destination through the same
+        contention-aware :class:`Topology` accounting as on-demand
+        transfers, so oversubscription stays honest — a prefetch stream
+        stretches every concurrent flow's ``contention_factor`` exactly
+        like a demand read would.  The issuing handler resumes after a
+        local API call; the transfer itself proceeds independently and
+        lands in ``_prefetch_ledger``, where the destination's ``_ds_get``
+        finds it and pays only ``max(0, eta - now)`` plus a residual
+        transfer for any under-predicted bytes.
+
+        Idempotent by ledger key ``(ds, key, dest)``: a retried attempt
+        re-yielding the same push is a no-op (no double-transfer, no
+        double-bill).  A crashed issuer needs no undo — the pushed bytes
+        were billed honestly (they really crossed the wire) and the ledger
+        entry only ever *reduces* a later read's wait, never changes its
+        value (§4.1 conditional creates make checkpoints immutable)."""
+        store = self.stores.get(effect.ds)
+        if store is None:
+            err(shim.DataStoreError(f"unknown datastore {effect.ds}"))
+            return
+        dest = effect.dest
+        lkey = (effect.ds, effect.key, dest)
+        if store.cloud == dest or lkey in self._prefetch_ledger:
+            # intra-cloud (nothing to push) or duplicate (at-least-once
+            # retry): report "no push started" without touching the wire
+            self.after(0.0, ok, False)
+            return
+        val = store.state.get(effect.key)
+        if val is None:
+            # value not committed yet (mis-ordered directive): degrade to
+            # the on-demand path rather than pushing a tombstone
+            self.after(0.0, ok, False)
+            return
+        actual = estimate_size(val)
+        # can't push more bytes than exist; a *under*-prediction pushes the
+        # predicted prefix and leaves the rest to the residual fallback
+        pushed = min(effect.size_bytes, actual) if effect.size_bytes else actual
+        if pushed <= 0:
+            self.after(0.0, ok, False)
+            return
+        src = store.cloud
+        topo = self.topology
+        tracked = topo.tracks_contention(src, dest)
+        if tracked and topo.contention_factor(src, dest) > 1.0:
+            # admission control: the link is already oversubscribed —
+            # speculation only wins by soaking *idle* bandwidth, and a push
+            # into a saturated pipe would stretch every demand flow (and
+            # its own ETA) for no overlap gain.  Decline; the consumer's
+            # DsGet falls back to an on-demand transfer, which pays the
+            # same contention it would have paid anyway.
+            self.after(0.0, ok, False)
+            return
+        if tracked:
+            topo.open_flow(src, dest, pushed)
+        wire = self.cost.wire_ms(src, dest, pushed)  # open-time stretch
+        factor = topo.contention_factor(src, dest) if tracked else 1.0
+        # command hop to the store, then first byte toward dest
+        start = self.rtt_ms(ex.cloud, src) / 2 + self.rtt_ms(src, dest) / 2
+        self._prefetch_ledger[lkey] = {
+            "eta": self.now + start + wire, "bytes": float(pushed)}
+        # egress billed at push time, once — the consuming _ds_get bills
+        # only the residual, so retries can never double-charge
+        self.bill.charge_egress(src, pushed,
+                                self.cost.egress_price_per_gb(src))
+        if tracked:
+            self.after(start + wire, self._prefetch_close,
+                       lkey, src, dest, pushed, wire / factor, factor)
+        # fire-and-forget: the push is a store-side trigger (the value is
+        # already committed there) — the issuing handler resumes at once,
+        # else the initiation cost would eat the overlap it buys
+        self.after(0.0, ok, True)
+
+    def _prefetch_close(self, lkey: Tuple[str, str, str], src: str, dest: str,
+                        nbytes: int, base_ms: float, factor_open: float) -> None:
+        """Bounded re-pricing at a prefetch flow's predicted completion.
+
+        ``CostModel.wire_ms`` samples the contention stretch *once* at
+        flow-open; a long-lived prefetch flow can outlive the flows it was
+        priced against.  At the open-time ETA we recompute the factor: if
+        the link got *more* crowded, the flow stays open for one residual
+        stretch (and the ledger ETA moves so consumers keep waiting
+        honestly); if it got less crowded (or unchanged) we just close.
+        Exactly one re-pricing round — the extension itself is priced at
+        the now-current factor and never re-examined, which bounds the
+        error to one window instead of recursing forever (documented in
+        ``CostModel.wire_ms``)."""
+        topo = self.topology
+        factor_now = topo.contention_factor(src, dest)
+        extra = base_ms * (factor_now - factor_open)
+        if extra > 1e-9:
+            ent = self._prefetch_ledger.get(lkey)
+            if ent is not None:
+                ent["eta"] += extra
+            self.after(extra, topo.close_flow, src, dest, nbytes)
+        else:
+            topo.close_flow(src, dest, nbytes)
+
     # -- datastore -----------------------------------------------------------------
 
     def _perform_ds(self, ex: Execution, effect: shim.Effect,
@@ -776,6 +892,20 @@ class SimCloud:
     def _ds_get(self, here: str, store: DataStoreService, effect: shim.DsGet):
         val = store.state.get(effect.key)
         nbytes = estimate_size(val)
+        # prefetched value: pay only the remaining in-flight time plus a
+        # residual on-demand transfer for under-predicted bytes.  The
+        # ledger is empty unless Prefetch effects ran, so the prefetch-off
+        # path short-circuits here — zero extra events, zero RNG draws.
+        if store.cloud != here and self._prefetch_ledger and val is not None:
+            ent = self._prefetch_ledger.get((effect.ds, effect.key, here))
+            if ent is not None:
+                residual = nbytes - int(ent["bytes"])
+                wire = max(0.0, ent["eta"] - self.now)
+                moves: tuple = ()
+                if residual > 0:   # mis-predicted size: fall back honestly
+                    wire += self._wire_flow(here, store.cloud, residual)
+                    moves = ((store.cloud, residual),)
+                return val, store.read_ms() + wire, 0, 1, moves
         wire = self._wire_flow(here, store.cloud, nbytes)
         moves = ((store.cloud, nbytes),) if store.cloud != here else ()
         return val, store.read_ms() + wire, 0, 1, moves

@@ -241,6 +241,17 @@ class CostModel:
         :meth:`Topology.contention_factor` when concurrent flows
         oversubscribe a capacity-pinned pair (1.0 on uncapped links and
         whenever nothing else is in flight, e.g. at planning time).
+
+        The stretch is sampled *once, at call time* — i.e. at flow-open in
+        SimCloud.  For the short request/response flows of the effect
+        interpreter that is accurate to within one flow lifetime; a
+        long-lived speculative *prefetch* flow, however, can outlive the
+        flows it was priced against, so SimCloud re-prices it once at its
+        predicted completion (``_prefetch_close``): if contention worsened
+        while it was in flight, the flow is extended by the residual
+        stretch (bounded to a single repricing round, so the correction
+        never recurses).  Under bursty arrivals this keeps prefetch sweep
+        numbers honest instead of optimistic.
         """
         if nbytes <= 0:
             return 0.0
@@ -336,13 +347,24 @@ class NodeProfile:
     accel: bool
     width: int = 1               # max observed Map instances per workflow
     samples: int = 0
+    # population std-dev of the observed output sizes — the prefetch
+    # planner's prediction-confidence gate (0.0: perfectly predictable,
+    # e.g. a single sample or a static hint)
+    out_bytes_std: float = 0.0
+
+    @property
+    def out_bytes_cv(self) -> float:
+        """Coefficient of variation of the output size (std / mean) — the
+        dimensionless confidence figure speculation is gated on."""
+        return self.out_bytes_std / self.out_bytes if self.out_bytes > 0 else 0.0
 
     def as_dict(self) -> dict:
         """JSON-ready form (rounded; see ``EdgeProfiles.as_dict``)."""
         return {"name": self.name, "out_bytes": self.out_bytes,
                 "compute_ms": round(self.compute_ms, 3),
                 "fixed_ms": round(self.fixed_ms, 3), "accel": self.accel,
-                "width": self.width, "samples": self.samples}
+                "width": self.width, "samples": self.samples,
+                "out_bytes_std": round(self.out_bytes_std, 3)}
 
 
 class EdgeProfiles:
@@ -403,14 +425,17 @@ class EdgeProfiles:
         nodes: Dict[str, NodeProfile] = {}
         for fn, ss in sizes.items():
             width = max((len(v) for v in widths[fn].values()), default=1)
+            mean = sum(ss) / len(ss)
+            var = sum((s - mean) ** 2 for s in ss) / len(ss)
             nodes[fn] = NodeProfile(
                 name=fn,
-                out_bytes=int(round(sum(ss) / len(ss))),
+                out_bytes=int(round(mean)),
                 compute_ms=sum(computes[fn]) / len(computes[fn]),
                 fixed_ms=fixed[fn],
                 accel=accel[fn],
                 width=width,
-                samples=len(ss))
+                samples=len(ss),
+                out_bytes_std=math.sqrt(var))
         return cls(nodes)
 
     # ---- planner-facing queries -------------------------------------------
@@ -419,6 +444,12 @@ class EdgeProfiles:
         """Learned mean output wire size of node ``name`` (None: untraced)."""
         p = self.nodes.get(name)
         return p.out_bytes if p is not None else None
+
+    def out_bytes_std(self, name: str) -> Optional[float]:
+        """Std-dev of node ``name``'s observed output size (None: untraced)
+        — lets the prefetch planner gate speculation on confidence."""
+        p = self.nodes.get(name)
+        return p.out_bytes_std if p is not None else None
 
     def workload(self, name: str) -> Optional[Tuple[float, float, bool]]:
         """(compute_ms, fixed_ms, accel) or None if the node was never traced."""
@@ -442,7 +473,9 @@ class EdgeProfiles:
             name=v.get("name", n), out_bytes=int(v["out_bytes"]),
             compute_ms=float(v["compute_ms"]), fixed_ms=float(v["fixed_ms"]),
             accel=bool(v["accel"]), width=int(v.get("width", 1)),
-            samples=int(v.get("samples", 0))) for n, v in d.items()})
+            samples=int(v.get("samples", 0)),
+            out_bytes_std=float(v.get("out_bytes_std", 0.0)))
+            for n, v in d.items()})
 
     def __len__(self) -> int:
         return len(self.nodes)

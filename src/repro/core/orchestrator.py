@@ -36,8 +36,8 @@ from repro.backends.datastore import (JOURNAL_DONE, JOURNAL_SEP,
                                       JOURNAL_START, SIGNAL_NS)
 from repro.backends.shim import (CreateClient, DsAppendGetList, DsCreate, DsDelete,
                                  DsGet, DsListPrefix, DsUpdateBitmap, Invoke,
-                                 InvocationError, Parallel, RunUser, Sleep, Trace,
-                                 WaitForSignal)
+                                 InvocationError, Parallel, Prefetch, RunUser,
+                                 Sleep, Trace, WaitForSignal)
 from repro.core import subgraph as sg
 from repro.core.jlobject import JLObject, fits_quota
 from repro.core.naming import (BITMAP_SUFFIX, IVK_SUFFIX, OUTPUT_SUFFIX,
@@ -133,6 +133,14 @@ def handle(view: sg.NodeView, event: Any) -> Generator:
         output = yield RunUser(data)
         yield Trace("output_ckp")
         yield DsCreate(wfs.output_ds, wfs.output_key, _env(output))
+        # fan-in peer with an armed prefetch directive: our output lives in
+        # the group datastore (output_ds == fanin.ds by compilation) and the
+        # aggregator's read key is this very checkpoint — push it toward the
+        # aggregator's cloud while the slower peers still compute.
+        if view.fanin is not None and view.fanin.prefetch_bytes:
+            yield Prefetch(wfs.output_ds, wfs.output_key,
+                           shim.cloud_of(view.fanin.agg_faas),
+                           view.fanin.prefetch_bytes)
 
     # ---- Fig 8: Wrap — invoke successors with invocation checkpoints --------
     yield from _wrap(view, wfs, output)
@@ -261,6 +269,14 @@ def _plan_one(wfs: WorkflowState, info: sg.NextFunctionInfo, ctl: Control,
         # majority-rule store if that differs from where we checkpointed
         if info.ds != wfs.output_ds:
             yield DsCreate(info.ds, wfs.output_key, _env(value))
+        # prefetch directive armed (core.prefetch): the value is committed
+        # and its key early-bound, so push it toward the consumer's cloud
+        # now — the eventual DsGet pays only the residual wire time.  One
+        # push per key (a Map's branches all read the same parent output).
+        if info.prefetch_bytes and select in (None, 0):
+            yield Prefetch(info.ds, wfs.output_key,
+                           shim.cloud_of(faas or info.faas),
+                           info.prefetch_bytes)
         if select is not None:
             meta["select"] = select
         jl = JLObject.indirect(ctl, info.ds, [wfs.output_key], meta)

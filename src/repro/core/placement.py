@@ -33,6 +33,7 @@ from typing import Any, Callable, Dict, Iterable, List, Mapping, Optional, Seque
 
 from repro.backends import calibration as cal
 from repro.backends import shim
+from repro.core import prefetch as pf
 from repro.core.costmodel import CostModel, EdgeProfiles, Topology, stage_cost
 
 
@@ -132,6 +133,11 @@ class PlacementPlan:
     weight: float = 1.0
     failover: Dict[str, Tuple[str, ...]] = field(default_factory=dict)
     excluded_clouds: Tuple[str, ...] = ()
+    # True when the plan was co-optimized with speculative prefetch: the
+    # analytic model discounted overlappable read legs, so deploy it with
+    # ``workflow.deploy(..., prefetch=True)`` or the predicted makespan
+    # will not materialize.
+    prefetch: bool = False
 
     def overrides(self) -> Dict[str, Dict[str, Any]]:
         """Per-node override dicts for ``subgraph.apply_placement``.
@@ -158,7 +164,8 @@ class PlacementPlan:
                 "failover": {k: list(v) for k, v in self.failover.items()},
                 "excluded_clouds": list(self.excluded_clouds),
                 "est_makespan_ms": round(self.est_makespan_ms, 3),
-                "est_cost_usd": self.est_cost_usd}
+                "est_cost_usd": self.est_cost_usd,
+                "prefetch": self.prefetch}
 
 
 class _Planner:
@@ -169,12 +176,14 @@ class _Planner:
                  instances: Optional[Mapping[str, int]],
                  candidates: Optional[Mapping[str, Sequence[str]]],
                  profiles: Optional[EdgeProfiles] = None,
-                 excluded_clouds: Sequence[str] = ()):
+                 excluded_clouds: Sequence[str] = (),
+                 prefetch: bool = False):
         self.spec = spec
         self.flavors = dict(flavors or flavors_from_config())
         self.cost = cost_model or CostModel()
         self.rtt = self.cost.rtt_ms
         self.profiles = profiles
+        self.prefetch = bool(prefetch)
         # learned Map widths seed instance counts; explicit hints win
         self.instances = dict(profiles.instances() if profiles else {})
         self.instances.update(instances or {})
@@ -323,6 +332,28 @@ class _Planner:
                            + self.cost.transfer_ms(dsc, cloud[n], nbytes)
                            + self.rtt(cloud[p], dsc)
                            + self.rtt(cloud[p], cloud[n]))
+                    if self.prefetch and dsc != cloud[n]:
+                        # co-optimization with speculative pushes: an edge
+                        # the prefetch pass enables (same decide_edge as the
+                        # runtime, so model and mechanism cannot diverge)
+                        # overlaps its ds→dst read wire with the hop's own
+                        # slack (invoke overhead + fan-out stagger).  A
+                        # fully-overlapped edge contributes only control
+                        # time to the critical-path DP — which is what lets
+                        # prefetch flip placements.  Egress cost terms are
+                        # untouched: the push moves the same bytes.
+                        d = pf.decide_edge(
+                            self.spec, p, n, e.mode, e.transfer_by_ds,
+                            cal.PAYLOAD_QUOTA.get(cloud[n],
+                                                  cal.DEFAULT_PAYLOAD_QUOTA),
+                            profiles=self.profiles,
+                            ds_cloud=dsc, dst_cloud=cloud[n])
+                        if d.enabled:
+                            read_wire = self.cost.wire_ms(dsc, cloud[n],
+                                                          nbytes)
+                            slack = (self.cost.fanout_stagger_ms(inst)
+                                     + self.cost.hop_overhead_ms)
+                            hop -= read_wire - max(0.0, read_wire - slack)
                     # upload leg: each of the src's ``p_inst`` instances
                     # writes its own output once per group (a width-k Map
                     # feeding a FanIn uploads k outputs, a fan-out source
@@ -469,7 +500,8 @@ class _Planner:
             shadow = _Planner(self.spec, self.flavors, self.cost,
                               self.instances, {n: c for n, c in
                                                self.candidates.items()},
-                              self.profiles, excluded_clouds={h})
+                              self.profiles, excluded_clouds={h},
+                              prefetch=self.prefetch)
             # only meaningful if some candidate survives outside ``h``
             movable = any(shim.cloud_of(f) != h
                           for n in self.nodes for f in shadow.candidates[n])
@@ -508,7 +540,8 @@ def plan_workflow(spec, flavors: Optional[Dict[str, cal.Flavor]] = None, *,
                   profiles: Optional[EdgeProfiles] = None,
                   candidates: Optional[Mapping[str, Sequence[str]]] = None,
                   excluded_clouds: Sequence[str] = (),
-                  with_failover: bool = False, sweeps: int = 3) -> PlacementPlan:
+                  with_failover: bool = False, sweeps: int = 3,
+                  prefetch: bool = False) -> PlacementPlan:
     """Jointly place every node of ``spec`` on the jointcloud.
 
     ``objective`` ∈ {"makespan", "cost"}; ``weight`` overrides it with an
@@ -523,6 +556,14 @@ def plan_workflow(spec, flavors: Optional[Dict[str, cal.Flavor]] = None, *,
     substrate model (``rtt_fn`` remains as a legacy RTT-only override).
     ``with_failover`` additionally assigns each node a *ranked* cross-cloud
     backup order derived from per-cloud outage re-plans.
+
+    ``prefetch=True`` co-optimizes placement with speculative transfers
+    (:mod:`repro.core.prefetch`): edges the prefetch pass enables overlap
+    their datastore read wire with per-hop slack in the analytic model, so
+    a fully-overlapped edge stops contributing to the critical-path DP —
+    which can flip placements that a demand-transfer model would reject
+    (and re-ranks the Pareto frontier via :func:`pareto_frontier`).  Deploy
+    the resulting plan with ``workflow.deploy(..., prefetch=True)``.
     """
     if objective not in ("makespan", "cost"):
         raise ValueError(f"objective must be makespan|cost, got {objective!r}")
@@ -536,14 +577,15 @@ def plan_workflow(spec, flavors: Optional[Dict[str, cal.Flavor]] = None, *,
     if cost_model is None:
         cost_model = CostModel(topology, rtt_override=rtt_fn)
     planner = _Planner(spec, flavors, cost_model, instances, candidates,
-                       profiles, excluded_clouds)
+                       profiles, excluded_clouds, prefetch=prefetch)
     assignment = planner.solve(weight, sweeps)
     mk, usd = planner.evaluate(assignment)
     failover = planner.failover_map(assignment, weight) if with_failover else {}
     return PlacementPlan(workflow=spec.name, objective=objective,
                          assignment=assignment, est_makespan_ms=mk,
                          est_cost_usd=usd, weight=weight, failover=failover,
-                         excluded_clouds=tuple(sorted(excluded_clouds)))
+                         excluded_clouds=tuple(sorted(excluded_clouds)),
+                         prefetch=bool(prefetch))
 
 
 def pareto_frontier(spec, flavors: Optional[Dict[str, cal.Flavor]] = None, *,

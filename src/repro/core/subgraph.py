@@ -207,6 +207,10 @@ class FanInInfo:
     peers: Tuple[PeerRef, ...]    # static case
     my_index: int = -1            # this node's bitmap slot (static case)
     quota: int = cal.DEFAULT_PAYLOAD_QUOTA
+    # prefetch directive (core.prefetch.annotate_views): predicted wire size
+    # of this peer's output, >0 ⇒ push it toward the aggregator's cloud as
+    # soon as the output checkpoint commits.  0 (default) is inert.
+    prefetch_bytes: int = 0
 
 
 @dataclass
@@ -228,6 +232,11 @@ class NextFunctionInfo:
     replicas: Tuple[str, ...] = ()
     batch_size: int = 0
     back_edge: bool = False
+    # prefetch directive (core.prefetch.annotate_views): predicted wire size
+    # of the upstream output, >0 ⇒ the producer speculatively pushes it
+    # toward this successor's cloud right after committing the indirect
+    # transfer.  0 (default) is inert — the orchestrator yields no Prefetch.
+    prefetch_bytes: int = 0
 
 
 @dataclass

@@ -459,6 +459,7 @@ class DriftDetector:
             base[name] = NodeProfile(
                 name=name,
                 out_bytes=int(w.out_bytes) if w.out_bytes else 0,
+                out_bytes_std=float(w.out_bytes_std or 0.0),
                 compute_ms=float(w.compute_ms), fixed_ms=float(w.fixed_ms),
                 accel=w.accel)
         return cls(base, thresholds)

@@ -174,7 +174,8 @@ class DeployedWorkflow:
 
 def deploy(backend: Backend, spec: sg.WorkflowSpec,
            catalog: Optional[sg.Catalog] = None, *,
-           plan: Any = None, durable: bool = False) -> DeployedWorkflow:
+           plan: Any = None, durable: bool = False,
+           prefetch: bool = False, profiles: Any = None) -> DeployedWorkflow:
     """Compile and deploy ``spec`` onto any Backend-protocol substrate.
     ``plan`` — a ``placement.PlacementPlan`` (or any object with
     ``.overrides()``) — re-places the workflow's nodes before compilation;
@@ -187,7 +188,18 @@ def deploy(backend: Backend, spec: sg.WorkflowSpec,
     instances replayable via :meth:`DeployedWorkflow.resume` at the cost of
     roughly one extra table write per effect.  Strictly opt-in — the
     default path yields byte-identical effect streams to previous
-    releases."""
+    releases.
+
+    ``prefetch=True`` runs the :mod:`repro.core.prefetch` planner pass over
+    the compiled views and arms speculative-push directives on every edge
+    it enables (``profiles`` — an ``EdgeProfiles`` — sharpens the size
+    predictions).  The backend must provide the ``prefetch`` capability
+    (probed here, per the Backend protocol): armed handlers yield
+    :class:`~repro.backends.shim.Prefetch` effects, so deploying them on a
+    non-capable backend degrades to a :class:`CapabilityError` at deploy
+    time, never an interpreter crash mid-workflow.  Also strictly opt-in —
+    with ``prefetch=False`` every directive stays at its inert default and
+    effect streams are byte-identical to previous releases."""
     if plan is not None:
         spec = sg.apply_placement(spec, plan.overrides())
     catalog = catalog or backend.catalog()
@@ -195,6 +207,14 @@ def deploy(backend: Backend, spec: sg.WorkflowSpec,
     if durable:
         for view in views.values():
             view.durable = True
+    if prefetch:
+        if not getattr(backend, "prefetch", None):
+            raise shim.CapabilityError(
+                f"{type(backend).__name__} provides no 'prefetch' "
+                f"capability, required to interpret speculative Prefetch "
+                f"effects (see the Backend protocol in repro.backends.shim)")
+        from repro.core.prefetch import annotate_views
+        annotate_views(views, spec, profiles=profiles)
     # ByRedundant replicas are additional deployment targets of the dst fn
     replica_targets: dict = {}
     for view in views.values():

@@ -81,10 +81,10 @@ CASES = {
 }
 
 
-def _run_on(kind: str, build):
+def _run_on(kind: str, build, **deploy_kw):
     spec, input_value, terminal, expected = build()
     backend = SimCloud(seed=0) if kind == "sim" else LocalRunner()
-    dep = wf.deploy(backend, spec)
+    dep = wf.deploy(backend, spec, **deploy_kw)
     wid = dep.start(input_value)
     if kind == "sim":
         backend.run()
@@ -320,6 +320,64 @@ def test_durable_mode_preserves_parity_semantics(case):
             backend.run(timeout_s=60.0)
         assert dep.result_of(wid, terminal) == expected, kind
         assert not backend.dropped, kind
+
+
+# ---- speculative pre-fetching: the third capability-gated parity axis -------
+
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_prefetch_mode_preserves_parity_semantics(case):
+    """The whole workflow zoo with speculative pre-fetching on: same
+    results, zero drops on both substrates — prefetch must be a pure
+    latency optimization, invisible to workflow semantics."""
+    spec, input_value, terminal, expected = CASES[case]()
+    for kind in ("sim", "local"):
+        backend = SimCloud(seed=0) if kind == "sim" else LocalRunner()
+        dep = wf.deploy(backend, spec, prefetch=True)
+        wid = dep.start(input_value)
+        if kind == "sim":
+            backend.run()
+        else:
+            backend.run(timeout_s=60.0)
+        assert dep.result_of(wid, terminal) == expected, kind
+        assert not backend.dropped, kind
+
+
+def prefetch_fanin_spec():
+    """A shape where directives actually arm: big predictable fan-in reads
+    with the datastore in the producers' cloud and the aggregator across."""
+    spec = WorkflowSpec("p-pf", gc=False)
+    spec.function("s", AWS,
+                  workload=Workload(out_bytes=64, fn=lambda x: x))
+    for p in ("p1", "p2", "p3"):
+        spec.function(p, AWS, workload=Workload(
+            out_bytes=3_500_000,
+            fn=lambda x: shim.Blob(3_500_000, "t")))
+    spec.function("agg", ALI, workload=Workload(
+        out_bytes=8, fn=lambda xs: len(xs)))
+    spec.fanout("s", ["p1", "p2", "p3"])
+    spec.fanin(["p1", "p2", "p3"], "agg")
+    return spec, 1, "agg", 3
+
+
+def test_prefetch_armed_parity_on_fanin():
+    """With directives genuinely armed (not just the capability on), both
+    backends still produce identical execution sets and results."""
+    sim = _run_on("sim", prefetch_fanin_spec, prefetch=True)
+    loc = _run_on("local", prefetch_fanin_spec, prefetch=True)
+    assert sim["done"] == loc["done"], (sim["done"], loc["done"])
+    assert sim["result"] == sim["expected"]
+    assert loc["result"] == loc["expected"]
+    assert not sim["backend"].dropped and not loc["backend"].dropped
+
+
+def test_prefetch_capability_probe_is_uniform():
+    """Both substrates expose the capability attribute; a disabled local
+    runner degrades to CapabilityError at deploy time, not mid-run."""
+    assert SimCloud().prefetch and LocalRunner().prefetch
+    spec, _, _, _ = prefetch_fanin_spec()
+    with pytest.raises(shim.CapabilityError, match="prefetch"):
+        wf.deploy(LocalRunner(prefetch=False), spec, prefetch=True)
 
 
 def test_legacy_sim_alias_still_points_at_backend():

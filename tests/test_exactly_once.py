@@ -123,6 +123,56 @@ def test_exactly_once_under_outage_with_failover_smoke(outage_start, outage_len,
     assert len(c_outs) == 1
 
 
+def prefetch_spec(agg_calls):
+    """Fan-in with big predictable cross-cloud reads — the shape where the
+    speculative-transfer path actually arms (ds lands in aws by majority,
+    the aggregator reads from aliyun)."""
+    from repro.backends.simcloud import Blob
+    spec = WorkflowSpec("pf-eo", gc=False)
+    spec.function("s", AWS, workload=Workload(out_bytes=64, fn=lambda x: x))
+    for p in ("p1", "p2", "p3"):
+        spec.function(p, AWS, workload=Workload(
+            compute_ms=40, out_bytes=3_500_000,
+            fn=lambda x: Blob(3_500_000, "t")))
+    spec.function("agg", ALI, workload=Workload(
+        out_bytes=8, fn=lambda xs: agg_calls.append(len(xs)) or len(xs)))
+    spec.fanout("s", ["p1", "p2", "p3"])
+    spec.fanin(["p1", "p2", "p3"], "agg")
+    return spec
+
+
+@pytest.mark.parametrize("crash_period,crash_count,seed", [
+    (3, 6, 0),           # aggressive: crashes land around pushes and reads
+    (5, 4, 7),
+    (4, 0, 42),          # no crashes (baseline sanity)
+])
+def test_exactly_once_with_prefetch_crash_schedule(crash_period, crash_count,
+                                                   seed):
+    """Speculative pushes must not weaken §4.1: under a crash schedule the
+    aggregator still sees exactly one complete input set, and the 3.5 MB
+    egress is billed at most once per producer (ledger dedupe across
+    retries — no double-transfer, no double-bill)."""
+    calls = []
+    sim = SimCloud(seed=seed)
+    pushes = []
+    orig = sim.bill.charge_egress
+    sim.bill.charge_egress = (lambda src, nb, price=None:
+                              pushes.append(nb) or orig(src, nb, price))
+    dep = wf.deploy(sim, prefetch_spec(calls), prefetch=True)
+    sim.crash_policy = periodic_crash_policy(crash_period, crash_count)
+    wid = dep.start(1)
+    sim.run()
+    sim.crash_policy = None
+    if not sim.dropped:
+        assert calls.count(3) >= 1
+        assert dep.result_of(wid, "agg") == 3
+    # at-most-once speculative transfer per producer output, regardless
+    assert len([n for n in pushes if n == 3_500_000]) <= 3
+    aggs = [r for r in dep.executions(wid)
+            if r.function == "agg" and r.status == "done"]
+    assert all(r.result == 3 for r in aggs)
+
+
 def test_extreme_duplicate_invocation_scenario():
     """§4.1.2 'most extreme scenario': crash exactly between the async invoke
     and its invocation checkpoint ⇒ the successor runs twice but the workflow

@@ -155,15 +155,19 @@ def journal_window_crash_policy(which: str, budget: int):
     return crash
 
 
-def _recover_until_quiescent(sim, spec, seed, crash_policy=None, rounds=8):
+def _recover_until_quiescent(sim, spec, seed, crash_policy=None, rounds=8,
+                             deploy_kw=None, on_fresh=None):
     """The documented recovery idiom, iterated: fresh backend, adopt stores,
     re-deploy durable, resume, run — until resume() finds nothing open.
-    ``crash_policy`` (if any) stays armed, so crashes also land mid-replay."""
+    ``crash_policy`` (if any) stays armed, so crashes also land mid-replay;
+    ``on_fresh`` observes every new backend incarnation before it runs."""
     dep = None
     for i in range(rounds):
         fresh = SimCloud(seed=seed + i + 1)
         fresh.adopt_stores(sim)
-        dep = wf.deploy(fresh, spec, durable=True)
+        if on_fresh is not None:
+            on_fresh(fresh)
+        dep = wf.deploy(fresh, spec, durable=True, **(deploy_kw or {}))
         if not dep.resume():
             return sim, dep
         fresh.crash_policy = crash_policy
@@ -242,6 +246,64 @@ def test_durable_crash_around_journal_commit(which, budget, fanout, seed):
                    for k in s.state.items
                    if "agg" in k and k.endswith("-output")]
     assert agg_outputs == [{"v": expected}]
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(
+    crash_period=st.integers(min_value=3, max_value=40),
+    crash_count=st.integers(min_value=0, max_value=8),
+    seed=st.integers(min_value=0, max_value=10_000),
+    durable=st.booleans(),
+)
+def test_exactly_once_with_prefetch_under_crashes(crash_period, crash_count,
+                                                  seed, durable):
+    """Speculative pushes under an adversarial crash schedule, with and
+    without the journal: exactly-once data invariants hold, each producer's
+    speculative egress is billed at most once per backend life (ledger
+    dedupe across retries; journal replay suppresses committed pushes —
+    only a push that crashed *before* its journal commit may legitimately
+    re-run on a fresh backend, whose ledger died with the old one), and
+    durable runs additionally recover to completion."""
+    from test_exactly_once import prefetch_spec
+
+    calls = []
+    sim = SimCloud(seed=seed)
+    lives = []                  # one push-list per backend incarnation
+
+    def spy(backend):
+        pushes = []
+        orig = backend.bill.charge_egress
+        backend.bill.charge_egress = (
+            lambda src, nb, price=None:
+            pushes.append(nb) or orig(src, nb, price))
+        lives.append(pushes)
+
+    spy(sim)
+    dep = wf.deploy(sim, prefetch_spec(calls), durable=durable, prefetch=True)
+    policy = periodic_crash_policy(crash_period, crash_count)
+    sim.crash_policy = spare_first_effect(policy) if durable else policy
+    wid = dep.start(1)
+    sim.run()
+    sim.crash_policy = None
+
+    if durable:
+        sim, dep = _recover_until_quiescent(
+            sim, prefetch_spec(calls), seed,
+            deploy_kw={"prefetch": True}, on_fresh=spy)
+        assert calls.count(3) >= 1
+    elif not sim.dropped:
+        assert calls.count(3) >= 1
+    # at-most-once speculative transfer per producer output within each
+    # backend life, however many retries the crash schedule forced
+    for pushes in lives:
+        assert len([n for n in pushes if n == 3_500_000]) <= 3
+    agg_outputs = [s.state.get(k) for s in sim.stores.values()
+                   for k in s.state.items
+                   if "/agg_" in k and k.endswith("-output")]
+    assert len(agg_outputs) <= 1
+    if agg_outputs:
+        assert agg_outputs == [{"v": 3}]
 
 
 @settings(max_examples=10, deadline=None,

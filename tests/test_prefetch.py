@@ -1,0 +1,362 @@
+"""Speculative cross-cloud pre-fetching: planner gates, placement
+co-optimization, and the runtime mechanism on both substrates.
+
+The planner (:mod:`repro.core.prefetch`) decides per edge whether a
+transfer is early-bound and predictable enough to push ahead of demand;
+``plan_workflow(prefetch=True)`` prices the same decisions into placement;
+SimCloud implements the push as a real contention-tracked flow with a
+residual fallback for mis-predicted sizes; the LocalRunner pushes on
+worker threads and aborts cleanly on crash.  Exactly-once interactions
+(retry dedupe, journal replay suppression) live here too — they are the
+§4.1 guarantees extended to the speculative path.
+"""
+
+import pytest
+
+from repro.backends import shim
+from repro.backends.localjax import LocalRunner
+from repro.backends.simcloud import Blob, SimCloud, Workload
+from repro.core import prefetch as pf
+from repro.core import traffic
+from repro.core import workflow as wf
+from repro.core.placement import plan_workflow
+from repro.core.subgraph import WorkflowSpec
+
+AWS = "aws/lambda"
+ALI = "aliyun/fc"
+GPU8 = "aliyun/fc_gpu"
+
+BIG = 3_500_000          # comfortably over every quota and the min-bytes floor
+QUOTA = 128_000
+
+
+# ---- workflow shapes ---------------------------------------------------------
+
+
+def fanin_spec(out_bytes=BIG, hint=-1, agg_calls=None):
+    """src → (p1 p2 p3 @aws, ``out_bytes`` each) → agg @aliyun.
+
+    The fan-in datastore lands in aws by majority rule, so the aggregator's
+    reads are the cross-cloud leg prefetch can hide.  ``hint`` overrides the
+    static ``out_bytes`` prediction (to model mis-prediction); ``None``
+    removes it entirely.
+    """
+    hint = out_bytes if hint == -1 else hint
+    spec = WorkflowSpec("pf-fanin", gc=False)
+    spec.function("src", AWS,
+                  workload=Workload(compute_ms=5, out_bytes=64, fn=lambda x: x))
+    for p in ("p1", "p2", "p3"):
+        spec.function(p, AWS, workload=Workload(
+            compute_ms=40, out_bytes=hint,
+            fn=lambda x: Blob(out_bytes, "t")))
+    spec.function("agg", ALI, workload=Workload(
+        compute_ms=5, out_bytes=8,
+        fn=lambda xs: ((agg_calls.append(len(xs))
+                        if agg_calls is not None else None) or len(xs))))
+    spec.fanout("src", ["p1", "p2", "p3"])
+    spec.fanin(["p1", "p2", "p3"], "agg")
+    return spec
+
+
+def edge_spec(**workload_kw):
+    """Two-node a→b spec whose 'a' workload is built from ``workload_kw``."""
+    spec = WorkflowSpec("pf-edge", gc=False)
+    spec.function("a", AWS, workload=Workload(fn=lambda x: x, **workload_kw))
+    spec.function("b", ALI, workload=Workload(fn=lambda x: x))
+    spec.sequence("a", "b")
+    return spec
+
+
+# ---- planner gates -----------------------------------------------------------
+
+
+def test_gate_unpredictable_size():
+    d = pf.decide_edge(edge_spec(), "a", "b", "FanIn", None, QUOTA)
+    assert not d.enabled and d.reason == "unpredictable size"
+
+
+def test_gate_not_early_bound_direct_sequence():
+    # a sequence edge under the quota rides the invoke body (ByPayload):
+    # nothing exists in a store to push ahead
+    d = pf.decide_edge(edge_spec(out_bytes=40_000), "a", "b",
+                       "Sequence", None, QUOTA)
+    assert not d.enabled and "not early-bound" in d.reason
+    # an explicit TransferByDs=False pin declines even an over-quota payload
+    d = pf.decide_edge(edge_spec(out_bytes=BIG), "a", "b",
+                       "Sequence", False, QUOTA)
+    assert not d.enabled and "not early-bound" in d.reason
+
+
+def test_gate_byget_auto_switch_is_early_bound():
+    # over-quota sequence payloads auto-switch to the ByGet (datastore) path
+    d = pf.decide_edge(edge_spec(out_bytes=200_000), "a", "b",
+                       "Sequence", None, QUOTA,
+                       ds_cloud="aws", dst_cloud="aliyun")
+    assert d.enabled and d.nbytes == 200_000
+
+
+def test_gate_store_colocated_with_consumer():
+    # majority-rule placement put the store next to the consumer: the wire
+    # cost is on the producer's write, which cannot start any earlier
+    d = pf.decide_edge(edge_spec(out_bytes=BIG), "a", "b", "FanIn", None,
+                       QUOTA, ds_cloud="aliyun", dst_cloud="aliyun")
+    assert not d.enabled and "co-located" in d.reason
+
+
+def test_gate_too_small():
+    d = pf.decide_edge(edge_spec(out_bytes=1_000), "a", "b", "FanIn", None,
+                       QUOTA, ds_cloud="aws", dst_cloud="aliyun")
+    assert not d.enabled and "too small" in d.reason
+
+
+def test_gate_low_confidence_declines():
+    # a declared out_bytes_std over the cv gate: speculation declined
+    d = pf.decide_edge(edge_spec(out_bytes=100_000, out_bytes_std=80_000),
+                       "a", "b", "FanIn", None, QUOTA,
+                       ds_cloud="aws", dst_cloud="aliyun")
+    assert not d.enabled and "low confidence" in d.reason
+    assert d.std == 80_000.0
+
+
+def test_gate_overlap_enabled():
+    d = pf.decide_edge(edge_spec(out_bytes=BIG), "a", "b", "FanIn", None,
+                       QUOTA, ds_cloud="aws", dst_cloud="aliyun")
+    assert d.enabled and d.reason == "overlap" and d.nbytes == BIG
+
+
+# ---- size-variance plumbing (profiles and static hints) ----------------------
+
+
+def test_learned_variance_gates_prediction_confidence():
+    """EdgeProfiles.from_records exposes per-node output-size variance, and
+    the planner declines speculation when the learned cv is too high."""
+    spec = WorkflowSpec("var", gc=False)
+    spec.function("a", AWS,
+                  workload=Workload(fn=lambda x: Blob(x, "v")))
+    spec.function("b", AWS, workload=Workload(fn=lambda x: 1))
+    spec.sequence("a", "b")
+    sim = SimCloud(seed=0)
+    dep = wf.deploy(sim, spec)
+    for nbytes in (100_000, 4_000_000):   # wildly varying output sizes
+        dep.start(nbytes)
+    sim.run()
+    profiles = dep.learn_profiles()
+    assert profiles.out_bytes_std("a") > 0
+    assert profiles.nodes["a"].out_bytes_cv > pf.DEFAULT_MAX_CV
+    d = pf.decide_edge(spec, "a", "b", "FanIn", None, QUOTA,
+                       profiles=profiles, ds_cloud="aws", dst_cloud="aliyun")
+    assert not d.enabled and "low confidence" in d.reason
+
+
+def test_static_std_hint_threads_through():
+    """Workload.out_bytes_std reaches both the planner's prediction and the
+    drift detector's plan-time baseline."""
+    spec = edge_spec(out_bytes=100_000, out_bytes_std=80_000)
+    assert pf.predict_out_bytes(spec, "a") == (100_000, 80_000.0)
+    det = traffic.DriftDetector.from_spec(spec)
+    assert det.baseline["a"].out_bytes_std == 80_000.0
+    assert det.baseline["a"].out_bytes_cv == pytest.approx(0.8)
+
+
+# ---- placement co-optimization -----------------------------------------------
+
+
+def flip_spec(agg_ms=45):
+    """Three heavy aws producers fan into an accel-friendly aggregator.
+
+    Without prefetch the 3×3.5 MB fan-in reads pin the aggregator to aws
+    (the demand wire dominates the GPU speedup); with the reads overlapped
+    the GPU flavor wins.
+    """
+    spec = WorkflowSpec("pf-flip", gc=False)
+    spec.function("src", AWS,
+                  workload=Workload(compute_ms=5, out_bytes=64, fn=lambda x: x))
+    for p in ("p1", "p2", "p3"):
+        spec.function(p, AWS, workload=Workload(
+            compute_ms=40, out_bytes=BIG, fn=lambda x: Blob(BIG, "t")))
+    spec.function("agg", AWS, workload=Workload(
+        compute_ms=agg_ms, accel=True, out_bytes=8, fn=lambda xs: len(xs)))
+    spec.fanout("src", ["p1", "p2", "p3"])
+    spec.fanin(["p1", "p2", "p3"], "agg")
+    return spec
+
+
+FLIP_CANDIDATES = {"src": (AWS,), "p1": (AWS,), "p2": (AWS,), "p3": (AWS,),
+                   "agg": (AWS, GPU8)}
+
+
+def test_prefetch_flips_a_placement():
+    """Co-optimization regression: pricing the overlap must flip the
+    aggregator from the demand-transfer-safe aws choice to the GPU."""
+    spec = flip_spec()
+    off = plan_workflow(spec, candidates=FLIP_CANDIDATES)
+    on = plan_workflow(spec, candidates=FLIP_CANDIDATES, prefetch=True)
+    assert off.assignment["agg"] == AWS
+    assert on.assignment["agg"] == GPU8
+    assert off.prefetch is False and on.prefetch is True
+    assert on.as_dict()["prefetch"] is True
+    # the overlapped plan must also claim a better makespan than pricing
+    # the same assignment without overlap would
+    assert on.est_makespan_ms < off.est_makespan_ms
+
+
+def test_prefetch_never_worsens_the_plan():
+    """The overlap term only removes hidden wire time: for any shape the
+    co-optimized plan's estimate is <= the demand-transfer plan's."""
+    for spec in (fanin_spec(), edge_spec(out_bytes=200_000), flip_spec(30)):
+        off = plan_workflow(spec)
+        on = plan_workflow(spec, prefetch=True)
+        assert on.est_makespan_ms <= off.est_makespan_ms + 1e-9
+
+
+# ---- capability gating -------------------------------------------------------
+
+
+def test_prefetch_capability_gated():
+    with pytest.raises(shim.CapabilityError, match="prefetch"):
+        wf.deploy(LocalRunner(prefetch=False), fanin_spec(), prefetch=True)
+    assert SimCloud().prefetch is True
+    assert LocalRunner().prefetch is True
+
+
+def test_localrunner_rejects_raw_prefetch_effect_when_disabled():
+    runner = LocalRunner(prefetch=False)
+    spec = fanin_spec()
+    dep = wf.deploy(runner, spec)        # prefetch off: deploy fine
+    wid = dep.start(1)
+    runner.run(timeout_s=60.0)
+    runner.close()
+    assert dep.result_of(wid, "agg") == 3
+
+
+# ---- SimCloud mechanism ------------------------------------------------------
+
+
+def _run_sim(spec, prefetch, seed=0):
+    sim = SimCloud(seed=seed)
+    dep = wf.deploy(sim, spec, prefetch=prefetch)
+    wid = dep.start(1)
+    sim.run()
+    return sim, dep, wid
+
+
+def test_simcloud_overlap_improves_makespan_same_bytes():
+    """The push hides the aggregator's cross-cloud reads behind upstream
+    compute — and moves exactly the same bytes (egress-neutral)."""
+    off_sim, off_dep, ow = _run_sim(fanin_spec(), False)
+    on_sim, on_dep, nw = _run_sim(fanin_spec(), True)
+    assert off_dep.result_of(ow, "agg") == on_dep.result_of(nw, "agg") == 3
+    assert on_dep.makespan_ms(nw) < off_dep.makespan_ms(ow)
+    assert (on_sim.bill.counters["egress_bytes"]
+            == off_sim.bill.counters["egress_bytes"])
+
+
+def test_simcloud_underpredicted_size_pays_residual():
+    """A hint below the actual size pushes only the predicted bytes; the
+    consumer pays a residual on-demand transfer — slower than an exact
+    prediction, still faster than no prefetch, and always correct."""
+    _, off_dep, ow = _run_sim(fanin_spec(), False, seed=1)
+    _, exact_dep, ew = _run_sim(fanin_spec(), True, seed=1)
+    _, under_dep, uw = _run_sim(fanin_spec(hint=1_000_000), True, seed=1)
+    assert under_dep.result_of(uw, "agg") == 3
+    assert exact_dep.makespan_ms(ew) < under_dep.makespan_ms(uw)
+    assert under_dep.makespan_ms(uw) < off_dep.makespan_ms(ow)
+
+
+def test_retry_dedupes_speculative_push_no_double_bill():
+    """Crash a producer between its push and the fan-in commit: the retry
+    re-offers the Prefetch, the ledger collapses it, and the 3.5 MB egress
+    is billed exactly once per producer."""
+    sim = SimCloud(seed=2)
+    pushes = []
+    orig = sim.bill.charge_egress
+    sim.bill.charge_egress = (lambda src, nb, price=None:
+                              pushes.append((src, nb)) or orig(src, nb, price))
+    dep = wf.deploy(sim, fanin_spec(), prefetch=True)
+    armed = {"n": 1}
+    def crash(ex, effect):
+        # the bitmap update is the fan-in commit — first effect offered
+        # after the Prefetch ran
+        if (armed["n"] and ex.dep.function == "p1"
+                and isinstance(effect, shim.DsUpdateBitmap)):
+            armed["n"] -= 1
+            return True
+        return False
+    sim.crash_policy = crash
+    wid = dep.start(1)
+    sim.run()
+    sim.crash_policy = None
+    assert armed["n"] == 0, "the crash must actually have fired"
+    assert not sim.dropped
+    assert dep.result_of(wid, "agg") == 3
+    assert len([p for p in pushes if p[1] == BIG]) == 3
+
+
+def test_durable_replay_suppresses_live_pushes():
+    """A journaled Prefetch must not re-fire on replay: recovery on a fresh
+    backend replays the producer past its committed push without opening a
+    new flow, and the workflow still completes exactly-once."""
+    calls = []
+    sim = SimCloud(seed=3)
+    dep = wf.deploy(sim, fanin_spec(agg_calls=calls),
+                    durable=True, prefetch=True)
+    sim.crash_policy = (lambda ex, effect:
+                        ex.dep.function == "p1"
+                        and isinstance(effect, shim.DsUpdateBitmap))
+    wid = dep.start(1)
+    sim.run()
+    sim.crash_policy = None
+    assert sim.dropped, "p1 must exhaust its retry budget"
+    assert any(k[1].startswith(wid) for k in sim._prefetch_ledger), \
+        "the speculative push did start in the first life"
+
+    fresh = SimCloud(seed=9)
+    fresh.adopt_stores(sim)
+    dep2 = wf.deploy(fresh, fanin_spec(agg_calls=calls),
+                     durable=True, prefetch=True)
+    assert dep2.resume()
+    fresh.run()
+    assert dep2.result_of(wid, "agg") == 3
+    assert calls == [3], "aggregator ran exactly once across both lives"
+    assert fresh._prefetch_ledger == {}, \
+        "replay must suppress the journaled push (no new flow opened)"
+
+
+# ---- LocalRunner mechanism ---------------------------------------------------
+
+
+def test_localrunner_prefetch_end_to_end():
+    calls = []
+    runner = LocalRunner(concurrency=4)
+    dep = wf.deploy(runner, fanin_spec(agg_calls=calls), prefetch=True)
+    wid = dep.start(1)
+    runner.run(timeout_s=60.0)
+    runner.close()
+    assert dep.result_of(wid, "agg") == 3
+    assert calls == [3]
+    assert not runner.dropped
+
+
+def test_localrunner_aborts_prefetch_on_crash_exactly_once():
+    """Crash a producer after its speculative push started: the abort path
+    must not leak a partial input past the journal — the retry re-pushes
+    and the aggregator still sees exactly one complete input set."""
+    calls = []
+    runner = LocalRunner(concurrency=4, max_requeues=3, retry_backoff_ms=5.0)
+    dep = wf.deploy(runner, fanin_spec(agg_calls=calls), prefetch=True)
+    armed = {"n": 1}
+    def crash(ex, effect):
+        if (armed["n"] and ex.record.function == "p1"
+                and isinstance(effect, shim.DsUpdateBitmap)):
+            armed["n"] -= 1
+            return True
+        return False
+    runner.crash_policy = crash
+    wid = dep.start(1)
+    runner.run(timeout_s=60.0)
+    runner.crash_policy = None
+    runner.close()
+    assert armed["n"] == 0, "the crash must actually have fired"
+    assert not runner.dropped
+    assert dep.result_of(wid, "agg") == 3
+    assert calls == [3], "exactly one aggregation despite the crashed push"

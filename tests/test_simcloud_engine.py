@@ -50,7 +50,7 @@ def _seq_samecloud():
     return sim
 
 
-def _diamond_crosscloud():
+def _diamond_crosscloud(**deploy_kw):
     spec = WorkflowSpec("diamond")
     spec.function("a", AWS, workload=Workload(fn=lambda x: x))
     for i, f in enumerate(["b", "c", "d"]):
@@ -60,7 +60,7 @@ def _diamond_crosscloud():
     spec.fanout("a", ["b", "c", "d"])
     spec.fanin(["b", "c", "d"], "agg")
     sim = SimCloud(seed=3)
-    dep = wf.deploy(sim, spec)
+    dep = wf.deploy(sim, spec, **deploy_kw)
     for i in range(4):
         dep.start(i, t=i * 1500.0)
     sim.run()
@@ -93,6 +93,16 @@ def test_crosscloud_digest_pinned():
 
 def test_outage_digest_pinned():
     assert timeline_digest(_outage_failover()) == OUTAGE_DIGEST
+
+
+def test_prefetch_off_timeline_bit_identical():
+    """Speculative pre-fetching is strictly opt-in: an explicit
+    ``prefetch=False`` deploy takes zero extra RNG draws and zero extra
+    heap events — the pinned digest must reproduce bit-for-bit.  Even
+    ``prefetch=True`` with nothing armed (no out_bytes hints anywhere, so
+    the planner declines every edge) must leave the schedule untouched."""
+    assert timeline_digest(_diamond_crosscloud(prefetch=False)) == DIAMOND_DIGEST
+    assert timeline_digest(_diamond_crosscloud(prefetch=True)) == DIAMOND_DIGEST
 
 
 def test_same_seed_bit_identical_under_load_substrate():
