@@ -48,6 +48,7 @@ unless adaptive strictly beats static on post-drift p50.
 from __future__ import annotations
 
 import argparse
+import functools
 import json
 import os
 import statistics
@@ -59,6 +60,7 @@ sys.path.insert(0, os.path.dirname(__file__))
 
 from repro.backends import calibration as cal
 from repro.backends.simcloud import SimCloud, Workload
+from repro.core import shard
 from repro.core import traffic
 from repro.core import workflow as wf
 from repro.core.subgraph import WorkflowSpec
@@ -67,6 +69,25 @@ import common
 
 # The traffic mix: one instance of each per 4 arrivals (round-robin).
 WORKFLOW_MIX = ("video4-joint", "qa-joint", "iot4", "mc6")
+
+# Module-level spec builders (picklable by reference): the sharded path ships
+# these — not live specs, which carry closures — to forked shard workers.
+SPEC_BUILDERS = (functools.partial(common.video_spec, 4, "joint"),
+                 functools.partial(common.qa_spec, "joint"),
+                 functools.partial(common.iot_spec, 4),
+                 functools.partial(common.mc_spec, 6))
+
+
+def _make_sim(seed: int) -> SimCloud:
+    """Uncontended engine-point substrate (picklable backend factory)."""
+    return SimCloud(seed=seed)
+
+
+def _make_sim_exact(seed: int) -> SimCloud:
+    """Zero-jitter uncontended substrate for exact shard-merge comparisons:
+    with ``jitter=0`` the engine's draw-and-scale is seed-independent, so
+    shards=1 vs shards=N merged metrics must be *equal*, not just close."""
+    return SimCloud(seed=seed, jitter=0.0)
 
 # Default sweep (wf/s).  With the contended substrate the mix offers
 # ≈3 Mbit of cross-cloud traffic per workflow, so the 0.4 Gbit/s pair
@@ -79,6 +100,25 @@ SLOTS_PER_CLOUD = 400
 SMOKE_RATE = 30.0
 SMOKE_N = 500
 SMOKE_WALL_BUDGET_S = 120.0
+
+# --shards --smoke gate: merged-equals-single comparison scale + budget
+SHARD_SMOKE_N = 400
+SHARD_SMOKE_WALL_BUDGET_S = 180.0
+
+# --net-jitter scenario: per-pair RTT jitter amplitude on the aws↔aliyun wire
+NET_JITTER_MS = 8.0
+
+# --profile artifact: cProfile top-N of the uncontended engine point
+PROFILE_N = 20_000
+PROFILE_SMOKE_N = 2_000
+PROFILE_TOP = 25
+PROFILE_OUT = "BENCH_profile_top25.txt"
+PROFILE_SMOKE_WALL_BUDGET_S = 240.0
+
+# --million: the pinned scale point (uncontended engine substrate)
+MILLION_RATE = 50.0
+MILLION_N = 1_000_000
+MILLION_SHARDS = 10
 
 SIM_SEED = 42
 ARRIVAL_SEED = 123
@@ -100,14 +140,25 @@ PRE_REWORK_ENGINE_POINT = {
     "events_per_s_engine": 21_181, "events_per_s": 1_086,
 }
 
+# Measured once on the pre-hot-path-pass engine (commit b0d32e8) at the
+# --million point (same mix/arrivals/seeds/scale, single process, same
+# single-core machine) — the scale-trajectory anchor the 1M point's
+# ``speedup_vs_baseline_engine`` compares against.
+PRE_SHARD_MILLION_BASELINE = {
+    "n": 1_000_000, "rate_wf_s": 50.0, "contended": False, "shards": 1,
+    "events": 109_000_000, "engine_wall_s": 3153.1, "total_wall_s": 3186.3,
+    "events_per_s_engine": 34_569, "peak_rss_gb": 17.26,
+    "p50_ms": 601.2, "p99_ms": 1289.7,
+}
+
 
 def build_specs():
-    return [common.video_spec(4, "joint"), common.qa_spec("joint"),
-            common.iot_spec(4), common.mc_spec(6)]
+    return [b() for b in SPEC_BUILDERS]
 
 
 def run_point(rate_wf_s: float, n: int, *, contended: bool = True,
-              durable: bool = False, prefetch: bool = False) -> dict:
+              durable: bool = False, prefetch: bool = False,
+              net_jitter: bool = False) -> dict:
     """One open-loop sweep point: ``n`` Poisson arrivals at ``rate_wf_s``,
     generated and measured by :mod:`repro.core.traffic`.  ``durable=True``
     deploys the mix with the event-sourced effect journal interposed
@@ -125,9 +176,16 @@ def run_point(rate_wf_s: float, n: int, *, contended: bool = True,
     pre-rework engine spent ~95% of a 10k-workflow point in those O(records)
     report scans)."""
     if contended:
-        sim = SimCloud(cal.contended_jointcloud(), seed=SIM_SEED,
+        config = cal.contended_jointcloud()
+        if net_jitter:
+            config["rtt_jitter_ms"] = {("aws", "aliyun"): NET_JITTER_MS}
+        sim = SimCloud(config, seed=SIM_SEED,
                        concurrency={"aws": SLOTS_PER_CLOUD,
                                     "aliyun": SLOTS_PER_CLOUD})
+    elif net_jitter:
+        config = cal.default_jointcloud()
+        config["rtt_jitter_ms"] = {("aws", "aliyun"): NET_JITTER_MS}
+        sim = SimCloud(config, seed=SIM_SEED)
     else:
         sim = SimCloud(seed=SIM_SEED)   # pre-rework-comparable substrate
     deps = [wf.deploy(sim, spec, durable=durable, prefetch=prefetch)
@@ -158,6 +216,7 @@ def run_point(rate_wf_s: float, n: int, *, contended: bool = True,
         "contended": contended,
         "durable": durable,
         "prefetch": prefetch,
+        "net_jitter": net_jitter,
         "per_workflow_p50_ms": per_wf_p50,
         "completed": point.completed,
         "dropped": point.dropped,
@@ -177,6 +236,292 @@ def run_point(rate_wf_s: float, n: int, *, contended: bool = True,
         "egress_mb_per_wf": round(sim.bill.counters["egress_bytes"] / n / 1e6, 3),
         "cold_starts": cold,
     }
+
+
+# ==========================================================================
+# Sharded points — core/shard.py fan-out of the engine point
+# ==========================================================================
+
+
+def run_sharded_point(rate_wf_s: float, n: int, *, shards: int,
+                      lazy: bool = True, processes: int = None,
+                      exact: bool = False) -> dict:
+    """One uncontended engine point partitioned across ``shards`` worker
+    processes (``shards=1``: inline, same code path as an unsharded run).
+
+    ``lazy=True`` feeds arrivals through :meth:`LoadRunner.submit_lazy`
+    (O(1) pending heap entries — required at 10⁶ arrivals); ``exact=True``
+    switches to the zero-jitter substrate for merged-equals-single
+    comparisons.  Reports both wall figures: ``engine_wall_max_s`` is what
+    a machine with ≥``shards`` cores experiences (shards run in parallel;
+    the slowest defines the point), ``engine_wall_sum_s`` what a
+    single-core machine experiences (shards run back to back)."""
+    schedule = traffic.PoissonProcess(rate_wf_s, seed=ARRIVAL_SEED).schedule(
+        n, streams=len(SPEC_BUILDERS))
+    factory = _make_sim_exact if exact else _make_sim
+    wall0 = time.perf_counter()
+    point, stats = shard.run_sharded(
+        SPEC_BUILDERS, factory, schedule, shards=shards, base_seed=SIM_SEED,
+        lazy=lazy, processes=processes, input_value=0)
+    total_wall = time.perf_counter() - wall0
+    wall_sum = stats["engine_wall_sum_s"]
+    return {
+        "rate_wf_s": rate_wf_s, "n": n, "shards": stats["shards"],
+        "lazy": lazy, "contended": False, "exact_substrate": exact,
+        "completed": point.completed, "dropped": point.dropped,
+        "p50_ms": round(point.p50_ms, 1) if point.p50_ms is not None else None,
+        "p99_ms": round(point.p99_ms, 1) if point.p99_ms is not None else None,
+        "mean_ms": round(point.mean_ms, 1) if point.mean_ms is not None else None,
+        "cost_usd": point.cost_usd,
+        "events": stats["events"],
+        "cold_starts": stats["cold_starts"],
+        "engine_wall_max_s": round(stats["engine_wall_max_s"], 2),
+        "engine_wall_sum_s": round(wall_sum, 2),
+        "total_wall_s": round(total_wall, 2),
+        "events_per_s_engine": int(stats["events"] / wall_sum)
+            if wall_sum else None,
+        "events_per_s": int(stats["events"] / total_wall)
+            if total_wall else None,
+        "per_shard": stats["per_shard"],
+    }
+
+
+def smoke_shards(shards: int = 4) -> int:
+    """CI gate for the sharded path, three assertions under a wall budget:
+
+    1. the ``shards=1`` code path still reproduces the pinned contended
+       smoke anchor (p50 626.3 / p99 2216.0) bit-for-bit;
+    2. merged-equals-single: on the zero-jitter uncontended substrate,
+       ``shards=N`` merged percentiles/mean/counts equal the single-process
+       run *exactly* (concatenate-and-select, not
+       percentile-of-percentiles), and cost matches at the published
+       round-6 granularity;
+    3. the whole gate fits ``SHARD_SMOKE_WALL_BUDGET_S``.
+    """
+    wall0 = time.perf_counter()
+    failed = False
+    base = run_point(SMOKE_RATE, SMOKE_N)
+    if (base["p50_ms"] != SMOKE_BASELINE_P50_MS
+            or base["p99_ms"] != SMOKE_BASELINE_P99_MS
+            or base["dropped"]):
+        print(f"[shards-smoke] FAIL: shards=1 anchor moved: "
+              f"p50 {base['p50_ms']} (pinned {SMOKE_BASELINE_P50_MS}), "
+              f"p99 {base['p99_ms']} (pinned {SMOKE_BASELINE_P99_MS}), "
+              f"dropped {base['dropped']}")
+        failed = True
+    one = run_sharded_point(SMOKE_RATE, SHARD_SMOKE_N, shards=1,
+                            lazy=False, exact=True)
+    many = run_sharded_point(SMOKE_RATE, SHARD_SMOKE_N, shards=shards,
+                             lazy=False, exact=True)
+    for k in ("p50_ms", "p99_ms", "mean_ms", "completed", "dropped",
+              "cost_usd"):
+        if one[k] != many[k]:
+            print(f"[shards-smoke] FAIL: merged != single on {k}: "
+                  f"shards=1 {one[k]} vs shards={shards} {many[k]}")
+            failed = True
+    wall = time.perf_counter() - wall0
+    print(f"[shards-smoke] anchor p50={base['p50_ms']} p99={base['p99_ms']}; "
+          f"merged (n={SHARD_SMOKE_N}, shards={shards}) "
+          f"p50={many['p50_ms']} p99={many['p99_ms']} mean={many['mean_ms']} "
+          f"cost={many['cost_usd']} vs single "
+          f"p50={one['p50_ms']} p99={one['p99_ms']} mean={one['mean_ms']} "
+          f"cost={one['cost_usd']}; wall={wall:.1f}s")
+    if wall > SHARD_SMOKE_WALL_BUDGET_S:
+        print(f"[shards-smoke] FAIL: wall {wall:.1f}s exceeds budget "
+              f"{SHARD_SMOKE_WALL_BUDGET_S:.0f}s")
+        failed = True
+    print("[shards-smoke] " + ("FAIL" if failed else
+                               "OK: anchor bit-exact, merged == single, "
+                               "within wall budget"))
+    return 1 if failed else 0
+
+
+def run_shards_comparison(n: int, shards: int) -> dict:
+    """Standalone ``--shards N``: the uncontended engine point single-shard
+    vs N-shard, with speedup figures for both machine models."""
+    one = run_sharded_point(MILLION_RATE, n, shards=1)
+    many = run_sharded_point(MILLION_RATE, n, shards=shards)
+    out = {"single": one, "sharded": many,
+           "speedup_total_wall": round(one["total_wall_s"]
+                                       / many["total_wall_s"], 2)
+           if many["total_wall_s"] else None}
+    print(f"[shards] n={n}: single {one['total_wall_s']}s "
+          f"({one['events_per_s']} ev/s) vs {shards} shards "
+          f"{many['total_wall_s']}s ({many['events_per_s']} ev/s) "
+          f"→ {out['speedup_total_wall']}× total-wall")
+    return out
+
+
+# ==========================================================================
+# Net-jitter scenario — per-pair RTT jitter distributions (off by default)
+# ==========================================================================
+
+
+def run_net_jitter(verbose: bool = True) -> dict:
+    """The ``--net-jitter`` scenario: the smoke point with a per-pair RTT
+    jitter amplitude pinned on the aws↔aliyun wire.
+
+    Gates: the jitter-off baseline must keep reproducing the pinned smoke
+    anchor exactly (jitter is strictly opt-in); the jittered run must be
+    deterministic (same seed ⇒ identical percentiles on a repeat run),
+    complete everything, and not *improve* latency (added wire delay can
+    only stretch makespans)."""
+    base = run_point(SMOKE_RATE, SMOKE_N)
+    jit = run_point(SMOKE_RATE, SMOKE_N, net_jitter=True)
+    jit2 = run_point(SMOKE_RATE, SMOKE_N, net_jitter=True)
+    ok = True
+    if (base["p50_ms"] != SMOKE_BASELINE_P50_MS
+            or base["p99_ms"] != SMOKE_BASELINE_P99_MS):
+        print(f"[net-jitter] FAIL: jitter-off baseline moved: "
+              f"p50 {base['p50_ms']} (pinned {SMOKE_BASELINE_P50_MS}), "
+              f"p99 {base['p99_ms']} (pinned {SMOKE_BASELINE_P99_MS}) — "
+              f"network jitter must be strictly opt-in")
+        ok = False
+    if (jit["p50_ms"], jit["p99_ms"], jit["mean_ms"]) != \
+            (jit2["p50_ms"], jit2["p99_ms"], jit2["mean_ms"]):
+        print(f"[net-jitter] FAIL: jittered run is not deterministic: "
+              f"{jit['p50_ms']}/{jit['p99_ms']} vs "
+              f"{jit2['p50_ms']}/{jit2['p99_ms']}")
+        ok = False
+    if jit["dropped"] or jit["completed"] != SMOKE_N:
+        print(f"[net-jitter] FAIL: jittered arm completed "
+              f"{jit['completed']}/{SMOKE_N} with {jit['dropped']} drops")
+        ok = False
+    if jit["p50_ms"] < base["p50_ms"]:
+        print(f"[net-jitter] FAIL: jitter *improved* p50 "
+              f"({base['p50_ms']} → {jit['p50_ms']}) — added wire delay "
+              f"cannot speed workflows up")
+        ok = False
+    out = {"rate_wf_s": SMOKE_RATE, "n": SMOKE_N,
+           "jitter_ms": NET_JITTER_MS, "baseline": base, "jittered": jit,
+           "p50_delta_ms": round(jit["p50_ms"] - base["p50_ms"], 1),
+           "p99_delta_ms": round(jit["p99_ms"] - base["p99_ms"], 1),
+           "ok": ok}
+    if verbose:
+        print(f"[net-jitter] off: p50 {base['p50_ms']} ms  "
+              f"p99 {base['p99_ms']} ms (pinned anchor)")
+        print(f"[net-jitter] ±{NET_JITTER_MS} ms on aws↔aliyun: "
+              f"p50 {jit['p50_ms']} ms (+{out['p50_delta_ms']}), "
+              f"p99 {jit['p99_ms']} ms (+{out['p99_delta_ms']})"
+              + ("" if ok else "  → FAIL"))
+    return out
+
+
+# ==========================================================================
+# Profile artifact — cProfile top-N of the engine point
+# ==========================================================================
+
+
+def run_profile(n: int = PROFILE_N, out_path: str = PROFILE_OUT,
+                budget_s: float = None) -> int:
+    """Profile the uncontended engine point and write the top-``PROFILE_TOP``
+    offenders (by tottime and by cumulative) to ``out_path`` — the artifact
+    the hot-path passes are guided by and reviewed against."""
+    import cProfile
+    import io
+    import pstats
+
+    wall0 = time.perf_counter()
+    prof = cProfile.Profile()
+    prof.enable()
+    pt = run_point(MILLION_RATE, n, contended=False)
+    prof.disable()
+    wall = time.perf_counter() - wall0
+    buf = io.StringIO()
+    stats = pstats.Stats(prof, stream=buf)
+    buf.write(f"# cProfile of the uncontended engine point "
+              f"(rate {MILLION_RATE} wf/s, n={n}, seeds {SIM_SEED}/"
+              f"{ARRIVAL_SEED}): {pt['events']} events, "
+              f"engine {pt['engine_wall_s']}s, report {pt['report_wall_s']}s, "
+              f"{pt['events_per_s_engine']} ev/s engine-only\n")
+    buf.write(f"# top {PROFILE_TOP} by tottime, then by cumulative\n")
+    stats.sort_stats("tottime").print_stats(PROFILE_TOP)
+    stats.sort_stats("cumulative").print_stats(PROFILE_TOP)
+    parent = os.path.dirname(out_path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    with open(out_path, "w") as f:
+        f.write(buf.getvalue())
+    print(f"[profile] n={n}: {pt['events']} events in "
+          f"{pt['engine_wall_s']}s engine ({pt['events_per_s_engine']} ev/s "
+          f"under instrumentation); top-{PROFILE_TOP} written to {out_path}")
+    if budget_s is not None and wall > budget_s:
+        print(f"[profile] FAIL: wall {wall:.1f}s exceeds budget "
+              f"{budget_s:.0f}s")
+        return 1
+    return 0
+
+
+# ==========================================================================
+# The 1M-workflow scale point
+# ==========================================================================
+
+
+def run_million(out: str, shards: int = MILLION_SHARDS) -> int:
+    """The pinned scale point: 10⁶ workflows (~1.1×10⁸ events) through the
+    uncontended engine substrate, single-shard then ``shards``-way, appended
+    to ``out`` as the ``million_point`` block.
+
+    Both arms use lazy submission (pre-pushing 10⁶ arrivals onto the event
+    heap costs gigabytes before the first workflow runs).  The sharded
+    arm's win on a single-core machine comes from working-set locality —
+    each shard's records/checkpoints stay ~``1/shards`` of the pooled
+    resident set — and multiplies on machines with ≥``shards`` cores, where
+    ``engine_wall_max_s`` is the wall figure.  Speedups are reported
+    against both the single-shard run of *this* engine and the pinned
+    pre-hot-path-pass baseline (``PRE_SHARD_MILLION_BASELINE``)."""
+    print(f"[million] single-shard arm: n={MILLION_N} @ {MILLION_RATE} wf/s "
+          f"(lazy submission)...")
+    one = run_sharded_point(MILLION_RATE, MILLION_N, shards=1)
+    print(f"[million] single: {one['total_wall_s']}s total "
+          f"({one['events_per_s']} ev/s), p50 {one['p50_ms']} "
+          f"p99 {one['p99_ms']}, dropped {one['dropped']}")
+    print(f"[million] {shards}-shard arm...")
+    many = run_sharded_point(MILLION_RATE, MILLION_N, shards=shards)
+    print(f"[million] sharded: {many['total_wall_s']}s total "
+          f"({many['events_per_s']} ev/s), p50 {many['p50_ms']} "
+          f"p99 {many['p99_ms']}, dropped {many['dropped']}")
+    base = PRE_SHARD_MILLION_BASELINE
+    block = {
+        "machine_note": (
+            f"measured on a single-core machine (os.cpu_count()="
+            f"{os.cpu_count()}): shards run sequentially, so the sharded "
+            f"win here is working-set locality; on a machine with >= "
+            f"{shards} cores the sharded arm's wall time approaches "
+            f"engine_wall_max_s"),
+        "single_shard": one,
+        "sharded": many,
+        "baseline_pre_shard_engine": base,
+        "speedup_vs_single_shard": round(
+            one["total_wall_s"] / many["total_wall_s"], 2)
+            if many["total_wall_s"] else None,
+        "speedup_vs_baseline_engine": round(
+            base["total_wall_s"] / many["total_wall_s"], 2)
+            if many["total_wall_s"] else None,
+        "projected_multicore_wall_s": many["engine_wall_max_s"],
+        "projected_multicore_speedup_vs_single_shard": round(
+            one["total_wall_s"] / many["engine_wall_max_s"], 2)
+            if many["engine_wall_max_s"] else None,
+    }
+    ok = (one["dropped"] == 0 and many["dropped"] == 0
+          and one["completed"] == MILLION_N
+          and many["completed"] == MILLION_N)
+    merged = {}
+    if os.path.exists(out):
+        with open(out) as f:
+            merged = json.load(f)
+    merged["million_point"] = block
+    with open(out, "w") as f:
+        json.dump(merged, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"[million] speedup: {block['speedup_vs_single_shard']}× vs "
+          f"single-shard (same engine), "
+          f"{block['speedup_vs_baseline_engine']}× vs pre-pass baseline "
+          f"engine; projected multi-core "
+          f"{block['projected_multicore_speedup_vs_single_shard']}× "
+          f"(wall {block['projected_multicore_wall_s']}s)")
+    print(f"wrote million_point into {out}")
+    return 0 if ok else 1
 
 
 # ==========================================================================
@@ -474,6 +819,27 @@ def main() -> int:
     ap.add_argument("--out", default="BENCH_throughput.json")
     ap.add_argument("--smoke", action="store_true",
                     help="CI gate: one bounded sub-capacity point")
+    ap.add_argument("--shards", type=int, default=0, metavar="N",
+                    help="sharded engine point: with --smoke, the CI gate "
+                         "(pinned anchor bit-exact + merged-equals-single "
+                         "under a wall budget); standalone, a single-shard "
+                         "vs N-shard comparison at the engine point")
+    ap.add_argument("--profile", action="store_true",
+                    help="profile the uncontended engine point and write "
+                         "the cProfile top-25 artifact "
+                         f"({PROFILE_OUT}); with --smoke, a smaller n "
+                         "under a wall budget")
+    ap.add_argument("--million", action="store_true",
+                    help="the pinned 1M-workflow scale point: single-shard "
+                         "vs sharded (default 10 shards; override with "
+                         "--shards), appended to --out as million_point "
+                         "(non-zero exit on any drop or incompletion). "
+                         "Takes ~1h on a single-core machine")
+    ap.add_argument("--net-jitter", dest="net_jitter", action="store_true",
+                    help="per-pair RTT jitter scenario at the smoke point "
+                         "(non-zero exit if the jitter-off baseline moves "
+                         "off the pinned anchor or the jittered run is "
+                         "non-deterministic)")
     ap.add_argument("--drift", action="store_true",
                     help="only the online-re-planning drift arm "
                          "(static vs adaptive; non-zero exit unless "
@@ -491,6 +857,23 @@ def main() -> int:
                          ">= 2 of 4 paper workflows improve p50, and no "
                          "extra drops)")
     args = ap.parse_args()
+    if args.million:
+        return run_million(args.out, shards=args.shards or MILLION_SHARDS)
+    if args.profile:
+        if args.smoke:
+            # scratch path: the smoke gate checks runnability + budget, it
+            # must not clobber the checked-in full-n artifact
+            return run_profile(PROFILE_SMOKE_N,
+                               out_path="results/profile_smoke_top25.txt",
+                               budget_s=PROFILE_SMOKE_WALL_BUDGET_S)
+        return run_profile()
+    if args.shards:
+        if args.smoke:
+            return smoke_shards(args.shards)
+        run_shards_comparison(args.n, args.shards)
+        return 0
+    if args.net_jitter:
+        return 0 if run_net_jitter()["ok"] else 1
     if args.prefetch:
         if args.smoke:
             # CI gate: just the pinned smoke point, both arms — fast.

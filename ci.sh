@@ -15,6 +15,13 @@ if [ "$#" -eq 0 ]; then
     # at the pinned smoke point (>= 2 of 4 paper workflows better, never
     # more drops) while the prefetch-off baseline stays pinned
     python benchmarks/throughput_sweep.py --prefetch --smoke
+    # shard gate: shards=1 reproduces the pinned anchor bit-for-bit, and a
+    # 4-shard multi-process run merges to the exact single-process metrics
+    # on the zero-jitter substrate (concatenate-and-select percentiles)
+    python benchmarks/throughput_sweep.py --shards 4 --smoke
+    # profile gate: the cProfile harness stays runnable (small n, wall
+    # budget) and emits the top-25 hot-path artifact
+    python benchmarks/throughput_sweep.py --profile --smoke
     # local-backend gate: one paper workflow end-to-end on the concurrent
     # real-execution backend (wall budget, zero drops)
     python benchmarks/run.py --backend local --smoke

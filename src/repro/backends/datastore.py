@@ -98,7 +98,7 @@ class TableState:
             insort(self._sorted_keys, key)
         if not isinstance(cur, list):
             raise TypeError(f"{self.name}[{key}] is not a list")
-        cur.extend(_copy_value(list(items)))
+        cur.extend([_copy_value(x) for x in items])
         return _copy_value(cur)
 
     def update_bitmap(self, index: int, key: str) -> List[bool]:

@@ -55,7 +55,7 @@ import heapq
 import itertools
 import math
 import random
-from bisect import bisect_left, bisect_right, insort
+from bisect import bisect_left, bisect_right
 from collections import deque
 from dataclasses import dataclass, field
 from typing import (Any, Callable, Dict, Generator, List, Mapping, Optional,
@@ -144,7 +144,8 @@ class Execution:
     """One running attempt of a deployed function (drives its generator)."""
 
     __slots__ = ("sim", "dep", "payload", "record", "gen", "effect_index",
-                 "alive", "faas_obj", "cloud", "suspended_ms", "suspend_t0")
+                 "alive", "faas_obj", "cloud", "suspended_ms", "suspend_t0",
+                 "_send", "_resume", "_throw")
 
     def __init__(self, sim: "SimCloud", dep: Deployment, payload: Any,
                  record: ExecutionRecord):
@@ -159,6 +160,12 @@ class Execution:
         self.cloud = self.faas_obj.cloud
         self.suspended_ms = 0.0       # Sleep/WaitForSignal time: not billed
         self.suspend_t0 = 0.0
+        # bound-method caches: _step binds gen.send and hands (resume, throw)
+        # to the effect handler on *every* effect — two fresh bound-method
+        # objects per effect is measurable garbage at 1M-workflow scale
+        self._send = self.gen.send
+        self._resume = self.resume
+        self._throw = self.throw
 
     # ---- generator stepping ------------------------------------------------
 
@@ -166,12 +173,12 @@ class Execution:
         self.record.t_start = self.sim.now
         self.record.status = "running"
         self.sim.running.setdefault(self.dep.faas, set()).add(self)
-        self._step(self.gen.send, None)
+        self._step(self._send, None)
 
     def resume(self, value: Any) -> None:
         if not self.alive:
             return
-        self._step(self.gen.send, value)
+        self._step(self._send, value)
 
     def throw(self, exc: BaseException) -> None:
         if not self.alive:
@@ -180,7 +187,7 @@ class Execution:
 
     def _step(self, advance: Callable[[Any], shim.Effect], arg: Any) -> None:
         sim = self.sim
-        send = self.gen.send
+        send = self._send
         # Synchronous effects (Trace/Now) complete at the current instant —
         # loop over them here instead of recursing through
         # perform → ok → resume, which would stack four frames per effect.
@@ -212,9 +219,9 @@ class Execution:
                 continue
             handler = sim._dispatch.get(klass)
             if handler is None:
-                sim.perform(self, effect, self.resume, self.throw)  # MRO path
+                sim.perform(self, effect, self._resume, self._throw)  # MRO path
             else:
-                handler(self, effect, self.resume, self.throw)
+                handler(self, effect, self._resume, self._throw)
             return
 
     def _finish(self, result: Any) -> None:
@@ -287,6 +294,10 @@ class SimCloud:
         from repro.core.costmodel import CostModel, Topology
         self.topology = Topology.from_config(config)
         self.cost = CostModel(self.topology)
+        # network-jitter fast path: with no per-pair amplitude pinned (the
+        # default) the interpreter draws zero extra random numbers, keeping
+        # timelines bit-identical to previous releases
+        self._net_jitter = bool(self.topology.rtt_jitter_table)
 
         cold_ms = cal.COLD_START_MS if cold_start_ms is None else cold_start_ms
         self.faas: Dict[str, FaaSSystem] = {}
@@ -315,7 +326,11 @@ class SimCloud:
         self._by_function: Dict[str, List[ExecutionRecord]] = {}
         self._done_records: List[ExecutionRecord] = []
         self._wf_records: Dict[str, List[ExecutionRecord]] = {}
-        self._wf_keys: List[str] = []            # sorted, for prefix queries
+        # sorted on demand (see workflow_records): arrivals append here and
+        # only prefix queries need order, so the per-arrival insort memmove
+        # is deferred to one amortized sort at query time
+        self._wf_keys: List[str] = []
+        self._wf_keys_sorted = True
         self._exec_ids = itertools.count()
         self.crash_policy: Optional[Callable[[Execution, shim.Effect], bool]] = None
         self.dropped: List[Tuple[str, str, Any]] = []   # (faas, function, payload)
@@ -461,7 +476,8 @@ class SimCloud:
             wbucket = self._wf_records.get(wfid)
             if wbucket is None:
                 self._wf_records[wfid] = wbucket = []
-                insort(self._wf_keys, wfid)
+                self._wf_keys.append(wfid)
+                self._wf_keys_sorted = False
             wbucket.append(rec)
         self.after(self._jit(cal.ASYNC_QUEUE_MS), self._start_queued,
                    dep, payload, rec)
@@ -717,6 +733,9 @@ class SimCloud:
             return
         here = ex.cloud
         rtt = self._jit(self.rtt_ms(here, target.cloud))
+        if self._net_jitter:
+            rtt += self.cost.sample_rtt_jitter(here, target.cloud,
+                                               self.rng.random())
         self.after(rtt / 2, self._invoke_arrive,
                    here, effect, target, nbytes, rtt, ok, err)
 
@@ -855,6 +874,9 @@ class SimCloud:
             return
         here = ex.cloud
         rtt = self.rtt_ms(here, store.cloud)
+        if self._net_jitter:
+            rtt += self.cost.sample_rtt_jitter(here, store.cloud,
+                                               self.rng.random())
         self.after(rtt / 2, self._ds_arrive, here, effect, store, rtt, ok, err)
 
     def _ds_arrive(self, here: str, effect: shim.Effect, store: DataStoreService,
@@ -1025,6 +1047,9 @@ class SimCloud:
         (batch spin-offs carry a ``<wfid>-batchN`` id), in creation order —
         a bisect over the sorted workflow-id index, not a record scan."""
         keys = self._wf_keys
+        if not self._wf_keys_sorted:
+            keys.sort()
+            self._wf_keys_sorted = True
         i = bisect_left(keys, prefix)
         out: List[ExecutionRecord] = []
         while i < len(keys) and keys[i].startswith(prefix):

@@ -93,6 +93,10 @@ class Topology:
     rtt_table: Mapping[Tuple[str, str], float] = field(default_factory=dict)
     bandwidth_table: Mapping[Tuple[str, str], float] = field(default_factory=dict)
     egress_table: Mapping[str, float] = field(default_factory=dict)
+    # per-pair RTT jitter amplitude in ms (uniform [0, amp) on top of the
+    # deterministic RTT).  Empty by default: interpreters draw zero extra
+    # random numbers and timelines stay bit-identical to previous releases.
+    rtt_jitter_table: Mapping[Tuple[str, str], float] = field(default_factory=dict)
     intra_rtt_ms: float = cal.INTRA_CLOUD_RTT_MS
     intra_bandwidth_gbps: float = cal.INTRA_CLOUD_BANDWIDTH_GBPS
     default_bandwidth_gbps: float = cal.BANDWIDTH_GBPS
@@ -118,11 +122,14 @@ class Topology:
               for (a, b), g in config.get("bandwidth_gbps", {}).items()}
         egress = {c: float(p)
                   for c, p in config.get("egress_price_per_gb", {}).items()}
+        jitter = {_pair(a, b): float(ms)
+                  for (a, b), ms in config.get("rtt_jitter_ms", {}).items()}
         capacity = {_pair(a, b): float(g)
                     for (a, b), g in config.get("link_capacity_gbps", {}).items()}
         default_cap = config.get("default_link_capacity_gbps")
         return cls(clouds=clouds, regions=regions, rtt_table=rtt,
                    bandwidth_table=bw, egress_table=egress,
+                   rtt_jitter_table=jitter,
                    capacity_table=capacity,
                    default_capacity_gbps=(None if default_cap is None
                                           else float(default_cap)))
@@ -140,6 +147,13 @@ class Topology:
                     if self.regions.get(a, a) == self.regions.get(b, b)
                     else cal.INTER_CLOUD_CROSS_REGION_RTT_MS)
         return base
+
+    def rtt_jitter_ms(self, a: str, b: str) -> float:
+        """Jitter amplitude of the a↔b RTT in ms (0.0 for intra-cloud links
+        and any pair the config did not pin — jitter is strictly opt-in)."""
+        if a == b:
+            return 0.0
+        return self.rtt_jitter_table.get(_pair(a, b), 0.0)
 
     def bandwidth_gbps(self, a: str, b: str) -> float:
         """Per-flow a↔b throughput in **Gbit/s** (VPC-class intra-cloud)."""
@@ -224,6 +238,11 @@ class CostModel:
         # never needs the per-call contention lookup
         self._maybe_contended = bool(self.topology.capacity_table) or \
             self.topology.default_capacity_gbps is not None
+        # per-pair memos over the frozen topology (rtt_ms / wire_ms sit on
+        # the interpreter's per-event path; the tables never change after
+        # construction, so the fallback chain only needs to run once a pair)
+        self._rtt_memo: Dict[Tuple[str, str], float] = {}
+        self._wire_denom: Dict[Tuple[str, str], float] = {}
 
     # ---- latency ----------------------------------------------------------
 
@@ -231,7 +250,20 @@ class CostModel:
         """a↔b round-trip (the ``rtt_override`` hook wins when given)."""
         if self._rtt_override is not None:
             return self._rtt_override(a, b)
-        return self.topology.rtt_ms(a, b)
+        r = self._rtt_memo.get((a, b))
+        if r is None:
+            r = self._rtt_memo[(a, b)] = self.topology.rtt_ms(a, b)
+        return r
+
+    def sample_rtt_jitter(self, a: str, b: str, u: float) -> float:
+        """One network-jitter draw for an a↔b round-trip: amplitude × ``u``,
+        with ``u ∈ [0, 1)`` supplied by the *caller's* seeded RNG so the
+        sample stays on the interpreter's single deterministic stream.
+        0.0 (and no arithmetic) whenever the pair has no amplitude pinned —
+        callers gate on ``topology.rtt_jitter_table`` so that the default
+        path draws nothing at all and timelines stay bit-identical."""
+        amp = self.topology.rtt_jitter_ms(a, b)
+        return amp * u if amp else 0.0
 
     def wire_ms(self, a: str, b: str, nbytes: int) -> float:
         """Serialization time of ``nbytes`` on the a↔b link.
@@ -255,8 +287,16 @@ class CostModel:
         """
         if nbytes <= 0:
             return 0.0
-        gbps = self.topology.bandwidth_gbps(a, b)
-        ms = (nbytes * 8 / (gbps * 1e9)) * 1000.0
+        # denom memo = bandwidth_gbps(a, b) * 1e9, computed once per pair —
+        # the expression below is kept in exactly the historical operation
+        # order so results are bit-identical (do NOT fold into a single
+        # coefficient multiply: that changes the last ulp and flips the
+        # pinned timeline digests).
+        denom = self._wire_denom.get((a, b))
+        if denom is None:
+            denom = self._wire_denom[(a, b)] = \
+                self.topology.bandwidth_gbps(a, b) * 1e9
+        ms = (nbytes * 8 / denom) * 1000.0
         if not self._maybe_contended:
             return ms
         factor = self.topology.contention_factor(a, b)

@@ -43,6 +43,22 @@ from repro.core.jlobject import JLObject, fits_quota
 from repro.core.naming import (BITMAP_SUFFIX, IVK_SUFFIX, OUTPUT_SUFFIX,
                                Control, collaboration_key)
 
+# Interned Trace effects: phase markers are yielded a handful of times per
+# function attempt (millions of times per sweep), every interpreter only ever
+# *reads* ``.phase``, and the phase vocabulary is closed — so one shared
+# instance per phase replaces a per-yield allocation (profile-driven;
+# ``tests/test_simcloud_engine.py`` digests pin that timelines are unchanged).
+_TR_UNWRAP = Trace("unwrap")
+_TR_OUTPUT_CKP = Trace("output_ckp")
+_TR_SUSPEND = Trace("suspend")
+_TR_USER_EXEC = Trace("user_exec")
+_TR_IVK_CKP = Trace("ivk_ckp")
+_TR_INVOKE = Trace("invoke")
+_TR_COORD = Trace("coordination")
+_TR_FAILOVER = Trace("failover")
+_TR_GC = Trace("gc")
+
+
 # value envelope so a stored ``None`` output is distinguishable from "absent"
 def _env(value: Any) -> dict:
     return {"v": value}
@@ -106,12 +122,12 @@ def make_handler(view: sg.NodeView):
 
 
 def handle(view: sg.NodeView, event: Any) -> Generator:
-    yield Trace("unwrap")
+    yield _TR_UNWRAP
     jl = _parse_event(view, event)
     wfs = WorkflowState(view, jl)
 
     # ---- Fig 7: output data checkpoint (at-most-once data production) ------
-    yield Trace("output_ckp")
+    yield _TR_OUTPUT_CKP
     ckp1 = yield DsGet(wfs.output_ds, wfs.output_key)
     if ckp1 is not None:
         output = _unenv(ckp1)
@@ -122,16 +138,16 @@ def handle(view: sg.NodeView, event: Any) -> Generator:
         # already produced data must not wait again).  Both effects release
         # the execution's concurrency slot for the whole suspension.
         if view.wait_signal:
-            yield Trace("suspend")
+            yield _TR_SUSPEND
             yield WaitForSignal(view.wait_signal, wfs.control.workflow_id)
         if view.sleep_ms:
-            yield Trace("suspend")
+            yield _TR_SUSPEND
             yield Sleep(view.sleep_ms)
-        yield Trace("unwrap")
+        yield _TR_UNWRAP
         data = yield from _unwrap(jl)
-        yield Trace("user_exec")
+        yield _TR_USER_EXEC
         output = yield RunUser(data)
-        yield Trace("output_ckp")
+        yield _TR_OUTPUT_CKP
         yield DsCreate(wfs.output_ds, wfs.output_key, _env(output))
         # fan-in peer with an armed prefetch directive: our output lives in
         # the group datastore (output_ds == fanin.ds by compilation) and the
@@ -191,7 +207,7 @@ def _wrap(view: sg.NodeView, wfs: WorkflowState, output: Any) -> Generator:
         yield from _run_gc(view, wfs)
         return
 
-    yield Trace("ivk_ckp")
+    yield _TR_IVK_CKP
     yield DsCreate(wfs.table, wfs.ivk_key, [])          # create_invocation_list
     ckp2: List[str] = (yield DsGet(wfs.table, wfs.ivk_key)) or []
 
@@ -321,7 +337,7 @@ def _plan_batch(view: sg.NodeView, wfs: WorkflowState, info: sg.NextFunctionInfo
     key concatenating the sub-graph's function names — deliberately not
     workflow-prefixed, so parallel workflow instances meet there.
     """
-    yield Trace("coordination")
+    yield _TR_COORD
     ck = collaboration_key("batch", [view.name, info.name])
     # idempotent contribution: value parked under a per-function-id key (not
     # workflow-prefixed ⇒ GC-safe), membership recorded once in the shared list
@@ -354,7 +370,7 @@ def _invoke_planned(wfs: WorkflowState, planned: List[_Planned],
     pending = [p for p in planned if p.key not in ckp2]
     if not pending:
         return
-    yield Trace("invoke")
+    yield _TR_INVOKE
     if len(planned) > cal.FANOUT_CHUNK:
         # grouped checkpointing: 10-way parallel invoke, append names per chunk
         for i in range(0, len(pending), cal.FANOUT_CHUNK):
@@ -366,23 +382,23 @@ def _invoke_planned(wfs: WorkflowState, planned: List[_Planned],
                 if isinstance(r, BaseException):
                     yield from _failover_invoke(p, r)
                 done_keys.append(p.key)
-            yield Trace("ivk_ckp")
+            yield _TR_IVK_CKP
             ckp2 = yield DsAppendGetList(wfs.table, wfs.ivk_key, done_keys)
-            yield Trace("invoke")
+            yield _TR_INVOKE
     else:
         for p in pending:
             try:
                 yield Invoke(p.faas, p.name, p.event, p.nbytes)
             except (InvocationError, shim.PayloadTooLarge) as exc:
                 yield from _failover_invoke(p, exc)
-            yield Trace("ivk_ckp")
+            yield _TR_IVK_CKP
             ckp2 = yield DsAppendGetList(wfs.table, wfs.ivk_key, [p.key])
-            yield Trace("invoke")
+            yield _TR_INVOKE
 
 
 def _failover_invoke(p: _Planned, primary_exc: BaseException) -> Generator:
     """Fig 10: walk the pre-deployed backups through fresh shim clients."""
-    yield Trace("failover")
+    yield _TR_FAILOVER
     last: BaseException = primary_exc
     for backup in p.failover:
         if backup == p.faas:
@@ -403,7 +419,7 @@ def _fanin(view: sg.NodeView, wfs: WorkflowState, output: Any,
            ckp2: Sequence[str]) -> Generator:
     fi = view.fanin
     assert fi is not None
-    yield Trace("coordination")
+    yield _TR_COORD
     size = fi.size if fi.size is not None else int(wfs.jl.meta.get("fanin_size", 0))
     if size <= 0:
         raise ValueError(f"{view.name}: dynamic fan-in without fanin_size meta")
@@ -431,12 +447,12 @@ def _fanin(view: sg.NodeView, wfs: WorkflowState, output: Any,
                            {"source": view.name, "fanin_inputs": True})
     p = _Planned(key=fi.agg_name, name=fi.agg_name, faas=fi.agg_faas,
                  failover=fi.agg_failover, event=jl.to_event(), nbytes=jl.wire_size())
-    yield Trace("invoke")
+    yield _TR_INVOKE
     try:
         yield Invoke(p.faas, p.name, p.event, p.nbytes)
     except (InvocationError, shim.PayloadTooLarge) as exc:
         yield from _failover_invoke(p, exc)
-    yield Trace("ivk_ckp")
+    yield _TR_IVK_CKP
     yield DsAppendGetList(wfs.table, wfs.ivk_key, [p.key])
 
 
@@ -446,7 +462,7 @@ def _fanin(view: sg.NodeView, wfs: WorkflowState, output: Any,
 def _run_gc(view: sg.NodeView, wfs: WorkflowState) -> Generator:
     if not view.gc_enabled or not view.gc:
         return
-    yield Trace("gc")
+    yield _TR_GC
     prefix = wfs.control.workflow_id + "/"
     payload = [{"prefix": prefix, "stores": list(t.stores)} for t in view.gc]
     results = yield Parallel([

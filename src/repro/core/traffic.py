@@ -110,6 +110,31 @@ class ArrivalSchedule:
             return None
         return len(self.arrivals) / (self.duration_ms / 1000.0)
 
+    # ---- sharding (partition independent workflows across processes) -------
+
+    def split(self, shards: int) -> List["ArrivalSchedule"]:
+        """Deal this schedule round-robin into ``shards`` sub-schedules.
+
+        Arrival ``j`` goes to shard ``(j // streams) % shards`` — whole
+        *rounds* of the stream rotation are dealt together, so every shard
+        sees every workflow of the mix at the same relative frequency and
+        the union of the parts is exactly this schedule (same absolute
+        submit delays; arrivals stay in ascending order within each part).
+        The deal depends only on position, never on shard execution order,
+        so partitioning is deterministic for any shard count.
+        ``shards <= 1`` returns ``[self]`` unchanged — the single-shard
+        path is byte-identical to not sharding at all.
+        """
+        if shards <= 1:
+            return [self]
+        streams = max(int(self.meta.get("streams", 1)), 1)
+        parts: List[List[Arrival]] = [[] for _ in range(shards)]
+        for j, a in enumerate(self.arrivals):
+            parts[(j // streams) % shards].append(a)
+        return [ArrivalSchedule(p, meta={**self.meta,
+                                         "shard": i, "shards": shards})
+                for i, p in enumerate(parts)]
+
     # ---- persistence (replay a measured trace) ----------------------------
 
     def as_dict(self) -> dict:
@@ -283,6 +308,50 @@ class LoadRunner:
         self.started.extend(new)
         return new
 
+    def submit_lazy(self, schedule: ArrivalSchedule) -> List[Tuple[Any, str]]:
+        """Submit a schedule as a *feeder chain* instead of pre-pushing every
+        arrival onto the backend's event heap.
+
+        ``submit`` materializes one heap event per arrival up front — at
+        10⁶ arrivals that is gigabytes of resident heap before the first
+        workflow even runs.  This path keeps O(1) pending arrivals: each
+        feeder event starts one workflow at its scheduled instant and arms
+        the next feeder.  Workflow ids are minted upfront so the returned
+        ``(workflow, workflow_id)`` pairs are immediately addressable.
+
+        Requires the backend's optional ``at(t, fn, *args)`` scheduler
+        capability (probed with ``getattr``, per the Backend protocol) —
+        virtual-time substrates only.  Metric-equivalent to ``submit`` but
+        *not* event-sequence-identical (the feeder adds one scheduler event
+        per arrival), so digest-pinned comparisons must use ``submit``."""
+        at = getattr(self.backend, "at", None)
+        if not at:
+            raise shim.CapabilityError(
+                f"{type(self.backend).__name__} provides no 'at' scheduler "
+                f"capability, required for lazy submission (see the Backend "
+                f"protocol in repro.backends.shim)")
+        arrivals = schedule.arrivals
+        if not arrivals:
+            return []
+        mix = self.deployed
+        nmix = len(mix)
+        new: List[Tuple[Any, str]] = [
+            (dep := mix[a.stream % nmix], dep.mint_workflow_id())
+            for a in arrivals]
+        iv = self.input_value
+        t0 = getattr(self.backend, "now", 0.0)   # schedule t_ms are delays
+        last = len(arrivals) - 1
+
+        def _feed(i: int) -> None:
+            dep, wid = new[i]
+            dep.start(iv, workflow_id=wid, t=0.0)
+            if i < last:
+                at(t0 + arrivals[i + 1].t_ms, _feed, i + 1)
+
+        at(t0 + arrivals[0].t_ms, _feed, 0)
+        self.started.extend(new)
+        return new
+
     def submit_signals(self, signals: Sequence[SignalArrival],
                        started: Optional[Sequence[Tuple[Any, str]]] = None
                        ) -> int:
@@ -373,6 +442,19 @@ class LoadRunner:
             self.submit_signals(signals, started)
         self.drain(**run_kwargs)
         return self.collect(started)
+
+    @staticmethod
+    def offered_sharded(builders: Sequence[Any], backend_factory: Any,
+                        schedule: ArrivalSchedule, **kwargs: Any):
+        """One open-loop point partitioned across worker processes — the
+        ``shards=N`` face of :meth:`offered`.  Delegates to
+        :func:`repro.core.shard.run_sharded` (see that module for the
+        independence invariants and the exact-merge semantics); takes spec
+        *builders* and a ``backend_factory(seed)`` instead of live deployed
+        workflows because each shard constructs its own backend in its own
+        process.  Returns ``(LoadPoint, stats_dict)``."""
+        from repro.core import shard            # local: shard imports traffic
+        return shard.run_sharded(builders, backend_factory, schedule, **kwargs)
 
     def run_closed(self, process: ClosedLoopProcess, rounds: int,
                    **run_kwargs: Any) -> LoadPoint:

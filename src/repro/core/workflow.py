@@ -54,11 +54,17 @@ class DeployedWorkflow:
         assert self.spec.entry is not None
         return self.views[self.spec.entry]
 
+    def mint_workflow_id(self) -> str:
+        """Reserve the next workflow id without starting anything — the
+        lazy-submission path (``LoadRunner.submit_lazy``) mints ids upfront
+        so callers can index results while arrivals are still being fed."""
+        return f"{self.spec.name}-{next(self._ids):06d}"
+
     def start(self, input_value: Any = None, *, workflow_id: Optional[str] = None,
               t: float = 0.0) -> str:
         """Async-invoke the entry function after a delay of ``t`` ms
         (virtual time on SimCloud, wall-clock on the local runner)."""
-        wfid = workflow_id or f"{self.spec.name}-{next(self._ids):06d}"
+        wfid = workflow_id or self.mint_workflow_id()
         self.backend.submit(self.entry.faas, self.entry.name,
                             {"workflow_id": wfid, "input": input_value}, t=t)
         return wfid

@@ -1,0 +1,245 @@
+"""Sharded multi-process simulation (``repro.core.shard``): splittable
+per-shard RNG streams, schedule partitioning, exact concatenate-and-select
+merges, and the loud rejection of cross-workflow coupling."""
+
+import pytest
+
+from repro.backends.simcloud import SimCloud, Workload
+from repro.core import shard, traffic
+from repro.core import workflow as wf
+from repro.core.shard import (ShardingError, ShardResult, assert_shardable,
+                              merge_results, run_sharded, seed_for_shard)
+from repro.core.subgraph import WorkflowSpec
+from repro.core.traffic import ArrivalSchedule, LoadRunner, percentile
+
+AWS = "aws/lambda"
+ALI = "aliyun/fc"
+
+
+# --------------------------------------------------------------------------
+# Module-level builders/factories: the sharded path pickles these by
+# reference into forked workers, so they must live at module scope.
+# --------------------------------------------------------------------------
+
+
+def seq_spec():
+    spec = WorkflowSpec("shard-seq", gc=False)
+    spec.function("a", AWS, workload=Workload(fixed_ms=4.0, fn=lambda x: x + 1))
+    spec.function("b", ALI, workload=Workload(fixed_ms=6.0, fn=lambda x: x * 2))
+    spec.sequence("a", "b")
+    return spec
+
+
+def fan_spec():
+    spec = WorkflowSpec("shard-fan", gc=False)
+    spec.function("s", ALI, workload=Workload(fixed_ms=3.0, fn=lambda x: x))
+    spec.function("l", AWS, workload=Workload(fixed_ms=5.0, fn=lambda x: x + 10))
+    spec.function("r", ALI, workload=Workload(fixed_ms=7.0, fn=lambda x: x + 20))
+    spec.fanout("s", ["l", "r"])
+    return spec
+
+
+def batch_spec():
+    spec = WorkflowSpec("shard-batch", gc=False)
+    spec.function("a", AWS, workload=Workload(fixed_ms=1.0, fn=lambda x: x))
+    spec.function("b", ALI, workload=Workload(fixed_ms=1.0, fn=lambda xs: xs))
+    spec.batch("a", "b", 4)
+    return spec
+
+
+def exact_sim(seed):
+    """Zero-jitter uncontended substrate: ``_jit`` draws-and-ignores the RNG
+    identically for any seed, so sharded and unsharded runs are timing-equal
+    (the precondition for the exact-equality tests below)."""
+    return SimCloud(seed=seed, jitter=0.0)
+
+
+BUILDERS = (seq_spec, fan_spec)
+
+
+# ==========================================================================
+# seed_for_shard: splittable, distinct, order-independent
+# ==========================================================================
+
+
+def test_seed_for_shard_pairwise_distinct():
+    seeds = {seed_for_shard(base, i)
+             for base in (0, 1, 42, 2**63, 2**64 - 1)
+             for i in range(64)}
+    assert len(seeds) == 5 * 64          # no collisions across the grid
+    assert all(0 <= s < 2**64 for s in seeds)
+
+
+def test_seed_for_shard_order_independent():
+    """A pure pair function: shard 3's stream does not depend on how many
+    shards exist, which ran first, or how often the function is called."""
+    forward = [seed_for_shard(42, i) for i in range(16)]
+    backward = [seed_for_shard(42, i) for i in reversed(range(16))]
+    assert forward == list(reversed(backward))
+    assert seed_for_shard(42, 3) == forward[3]   # repeat call, same value
+    # distinct base seeds give unrelated streams for the same shard id
+    assert seed_for_shard(42, 3) != seed_for_shard(43, 3)
+
+
+# ==========================================================================
+# ArrivalSchedule.split: a partition that preserves the mix
+# ==========================================================================
+
+
+def test_split_one_is_identity():
+    s = traffic.PoissonProcess(30.0, seed=9).schedule(40, streams=4)
+    assert s.split(1) == [s]
+
+
+def test_split_partitions_and_preserves_mix():
+    streams = 4
+    s = traffic.PoissonProcess(30.0, seed=9).schedule(64, streams=streams)
+    parts = s.split(3)
+    assert len(parts) == 3
+    # disjoint union, order preserved: re-dealing rounds round-robin
+    dealt = [[] for _ in range(3)]
+    for j, a in enumerate(s):
+        dealt[(j // streams) % 3].append((a.t_ms, a.stream))
+    for part, expect in zip(parts, dealt):
+        assert [(a.t_ms, a.stream) for a in part] == expect
+        # whole rounds are dealt, so every shard sees the full workflow mix
+        assert {a.stream for a in part} == set(range(streams))
+        # within a shard, times stay monotone non-decreasing
+        times = [a.t_ms for a in part]
+        assert times == sorted(times)
+    assert sum(len(p) for p in parts) == len(s)
+    # provenance is stamped for the worker
+    assert [p.meta["shard"] for p in parts] == [0, 1, 2]
+    assert all(p.meta["shards"] == 3 for p in parts)
+
+
+def test_split_survives_dict_roundtrip():
+    s = traffic.UniformProcess(50.0).schedule(12, streams=2)
+    part = s.split(2)[1]
+    again = ArrivalSchedule.from_dict(part.as_dict())
+    assert [(a.t_ms, a.stream) for a in again] == \
+        [(a.t_ms, a.stream) for a in part]
+
+
+# ==========================================================================
+# merge_results: concatenate-and-select, never percentile-of-percentiles
+# ==========================================================================
+
+
+def _synthetic(shard_id, makespans):
+    ms = sorted(float(x) for x in makespans)
+    return ShardResult(shard_id=shard_id, seed=shard_id, submitted=len(ms),
+                       completed=len(ms), dropped=0, makespans_ms=ms,
+                       cost_usd=0.001 * len(ms), events=10 * len(ms),
+                       engine_wall_s=1.0, duration_ms=max(ms))
+
+
+def test_merge_is_exact_on_skewed_shards():
+    """Deliberately unequal shard distributions: the pooled percentile and
+    percentile-of-percentiles disagree, and the merge must match the pool."""
+    fast = _synthetic(0, range(100, 200))          # 100..199
+    slow = _synthetic(1, range(1000, 1010))        # 1000..1009
+    point, stats = merge_results([fast, slow])
+    pooled = sorted(fast.makespans_ms + slow.makespans_ms)
+    assert point.makespans_ms == pooled
+    assert point.p50_ms == percentile(pooled, 0.5)
+    assert point.p99_ms == percentile(pooled, 0.99)
+    # the biased estimator would have averaged or selected per-shard p99s
+    per_shard_p99s = [percentile(fast.makespans_ms, 0.99),
+                      percentile(slow.makespans_ms, 0.99)]
+    assert point.p99_ms not in per_shard_p99s or \
+        point.p99_ms == percentile(pooled, 0.99)
+    assert point.submitted == 110 and point.completed == 110
+    assert point.cost_usd == pytest.approx(0.11, abs=1e-9)
+    assert stats["events"] == 1100
+    assert stats["engine_wall_sum_s"] == pytest.approx(2.0)
+    assert stats["engine_wall_max_s"] == pytest.approx(1.0)
+    assert point.duration_ms == pytest.approx(1009.0)
+
+
+# ==========================================================================
+# run_sharded: shards=N merged metrics == shards=1, bit for bit
+# ==========================================================================
+
+
+def test_sharded_equals_single_on_exact_substrate():
+    schedule = traffic.PoissonProcess(40.0, seed=123).schedule(
+        120, streams=len(BUILDERS))
+    single, _ = run_sharded(BUILDERS, exact_sim, schedule,
+                            shards=1, base_seed=42, input_value=1)
+    merged, stats = run_sharded(BUILDERS, exact_sim, schedule,
+                                shards=4, base_seed=42, input_value=1)
+    assert stats["shards"] == 4
+    assert merged.completed == single.completed == 120
+    assert merged.dropped == single.dropped == 0
+    # exact equality: same floats, not approx — concatenate-and-select over
+    # timing-identical shards reproduces the pooled run's samples
+    assert merged.makespans_ms == single.makespans_ms
+    assert merged.p50_ms == single.p50_ms
+    assert merged.p99_ms == single.p99_ms
+    assert merged.mean_ms == single.mean_ms
+    # cost compared at the round-6 value the harness publishes (per-shard
+    # float summation order differs below that)
+    assert merged.cost_usd == pytest.approx(single.cost_usd, abs=1e-6)
+    seeds = [s["seed"] for s in stats["per_shard"]]
+    assert len(set(seeds)) == 4
+    assert seeds == [seed_for_shard(42, i) for i in range(4)]
+
+
+def test_shards_one_matches_plain_loadrunner():
+    """The ``shards=1`` path is the unsharded code path — anchors reproduce
+    bit-for-bit."""
+    schedule = traffic.PoissonProcess(40.0, seed=7).schedule(
+        60, streams=len(BUILDERS))
+    backend = exact_sim(42)
+    deployed = [wf.deploy(backend, b()) for b in BUILDERS]
+    runner = LoadRunner(deployed, input_value=1)
+    runner.submit(schedule)
+    runner.drain()
+    plain = runner.collect()
+    point, stats = run_sharded(BUILDERS, exact_sim, schedule,
+                               shards=1, base_seed=42, input_value=1)
+    assert stats["shards"] == 1
+    assert point.makespans_ms == plain.makespans_ms
+    assert (point.p50_ms, point.p99_ms, point.mean_ms) == \
+        (plain.p50_ms, plain.p99_ms, plain.mean_ms)
+    assert point.cost_usd == plain.cost_usd
+
+
+def test_submit_lazy_metrics_match_eager():
+    """The lazy feeder trades one extra timer event per arrival for O(1)
+    pending-heap growth; on a zero-jitter substrate its metrics are
+    identical to eager submission."""
+    schedule = traffic.PoissonProcess(40.0, seed=5).schedule(
+        50, streams=len(BUILDERS))
+    points = []
+    for lazy in (False, True):
+        backend = exact_sim(42)
+        deployed = [wf.deploy(backend, b()) for b in BUILDERS]
+        runner = LoadRunner(deployed, input_value=1)
+        (runner.submit_lazy if lazy else runner.submit)(schedule)
+        runner.drain()
+        points.append(runner.collect())
+    eager, lazy = points
+    assert lazy.completed == eager.completed == 50
+    assert lazy.makespans_ms == eager.makespans_ms
+    assert lazy.cost_usd == eager.cost_usd
+
+
+# ==========================================================================
+# Shardability: cross-workflow coupling is rejected loudly
+# ==========================================================================
+
+
+def test_bybatch_rejected():
+    with pytest.raises(ShardingError, match="ByBatch"):
+        assert_shardable([batch_spec()])
+    # ...and through the full sharded entry point, before any work runs
+    schedule = traffic.UniformProcess(10.0).schedule(8)
+    with pytest.raises(ShardingError, match="shards=1"):
+        run_sharded((batch_spec,), exact_sim, schedule,
+                    shards=1, base_seed=0, input_value=1)
+
+
+def test_plain_specs_pass_shardability():
+    assert_shardable([seq_spec(), fan_spec()])   # no exception

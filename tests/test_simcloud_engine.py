@@ -432,3 +432,75 @@ def test_connection_refused_single_jitter():
         sim.submit(AWS, "h", {})
         sim.run()
         assert seen["latency"] <= rtt_base * 2.0 + 1e-9
+
+
+# ---- per-pair RTT jitter distributions (strictly opt-in) -------------------
+
+
+def _jitter_config(amp_ms):
+    config = cal.default_jointcloud()
+    config["rtt_jitter_ms"] = {("aws", "aliyun"): amp_ms}
+    return config
+
+
+def _diamond_with_config(config, seed=3):
+    spec = WorkflowSpec("diamond")
+    spec.function("a", AWS, workload=Workload(fn=lambda x: x))
+    for i, f in enumerate(["b", "c", "d"]):
+        spec.function(f, ALI if i % 2 else AWS,
+                      workload=Workload(fn=lambda x, i=i: x + i))
+    spec.function("agg", ALI, workload=Workload(fn=lambda xs: sorted(xs)))
+    spec.fanout("a", ["b", "c", "d"])
+    spec.fanin(["b", "c", "d"], "agg")
+    sim = SimCloud(config, seed=seed)
+    dep = wf.deploy(sim, spec)
+    wfids = [dep.start(i, t=i * 1500.0) for i in range(4)]
+    sim.run()
+    return sim, dep, wfids
+
+
+def test_net_jitter_off_by_default():
+    """With no ``rtt_jitter_ms`` in the config the fast-path flag stays
+    down and the pinned digest reproduces — zero extra RNG draws."""
+    sim = SimCloud(seed=3)
+    assert sim._net_jitter is False
+    assert sim.topology.rtt_jitter_ms("aws", "aliyun") == 0.0
+    sim2, _, _ = _diamond_with_config(cal.default_jointcloud())
+    assert timeline_digest(sim2) == DIAMOND_DIGEST
+
+
+def test_topology_parses_rtt_jitter_table():
+    topo = Topology.from_config(_jitter_config(8.0))
+    assert topo.rtt_jitter_ms("aws", "aliyun") == 8.0
+    assert topo.rtt_jitter_ms("aliyun", "aws") == 8.0   # pair-symmetric
+    assert topo.rtt_jitter_ms("aws", "aws") == 0.0      # intra-cloud: never
+    assert topo.rtt_jitter_ms("aws", "gcloud") == 0.0   # unpinned pair
+    cost = CostModel(topo)
+    assert cost.sample_rtt_jitter("aws", "aliyun", 0.5) == 4.0
+    assert cost.sample_rtt_jitter("aws", "aws", 0.99) == 0.0
+
+
+def test_net_jitter_deterministic_and_additive():
+    """Jittered runs are seeded-deterministic (same seed, same config ⇒
+    bit-identical timelines), diverge from the zero-amplitude pin, and can
+    only *add* latency — the draw is uniform over [0, amp)."""
+    a = timeline_digest(_diamond_with_config(_jitter_config(5.0))[0])
+    b = timeline_digest(_diamond_with_config(_jitter_config(5.0))[0])
+    assert a == b                      # deterministic under jitter
+    assert a != DIAMOND_DIGEST        # ...but a different schedule
+    base_sim, base_dep, wfids = _diamond_with_config(cal.default_jointcloud())
+    jit_sim, jit_dep, jwfids = _diamond_with_config(_jitter_config(5.0))
+    assert wfids == jwfids
+    for wid in wfids:
+        assert jit_dep.makespan_ms(wid) >= base_dep.makespan_ms(wid) - 1e-9
+
+
+def test_net_jitter_amplitude_scales():
+    """A larger pinned amplitude produces a different (and on average
+    slower) timeline than a smaller one, same seed."""
+    small_sim, small_dep, wfids = _diamond_with_config(_jitter_config(1.0))
+    big_sim, big_dep, _ = _diamond_with_config(_jitter_config(200.0))
+    assert timeline_digest(small_sim) != timeline_digest(big_sim)
+    small_total = sum(small_dep.makespan_ms(w) for w in wfids)
+    big_total = sum(big_dep.makespan_ms(w) for w in wfids)
+    assert big_total > small_total
