@@ -1,0 +1,205 @@
+"""Remote chaos smoke gate: kill -9 the worker pool mid-run, resume, verify.
+
+The CI contract for the distributed substrate
+(:class:`repro.backends.remote.RemoteRunner`):
+
+1. A **coordinator process** starts a RemoteRunner over a shared store
+   directory, durable-deploys a two-stage workflow (stage a records a side
+   effect; stage b parks on a multi-second ``Sleep`` before recording its
+   own), and arms a chaos policy that ``kill -9``'s the worker *process*
+   claiming stage b the moment it is offered the Sleep — a real mid-attempt
+   process death, recovered by lease expiry + redelivery, not an in-process
+   retry.
+2. The parent waits for stage a's side effect to land, then SIGKILLs the
+   coordinator **and every worker pid registered in
+   ``<store_dir>/workers.json``** (workers are forked daemons: they survive
+   their parent's SIGKILL — atexit never runs — so an external harness must
+   kill the registry, exactly what the file is for).
+3. The parent builds a **fresh RemoteRunner over the same store**,
+   re-deploys, calls ``resume()``, and drains a brand-new pool.
+
+Pass criteria (exit 0):
+
+* ``resume()`` finds the open journal and the rerun reaches the *identical
+  final result* an uninterrupted run produces;
+* **zero duplicate side effects** — each stage's effect line appears exactly
+  once across the killed attempts and the replayed one;
+* the whole gate finishes inside the wall budget.
+
+    PYTHONPATH=src python benchmarks/remote_chaos_smoke.py
+
+(The ``--worker <dir>`` entry point is internal: it is the coordinator the
+gate spawns and then kills.)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_ROOT = os.path.dirname(_HERE)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+SLEEP_MS = 4000.0          # stage-b suspension the coordinator kill lands in
+KILL_GRACE_S = 2.0         # covers b's claim + the chaos kill + lease expiry
+LEASE_MS = 1500.0          # life 1's visibility timeout (short: one recovery
+                           # happens *inside* the first life)
+WALL_BUDGET_S = 90.0       # whole gate, including the replayed sleep
+INPUT_V = 3
+EXPECT_B = {"v": INPUT_V * 2 + 10}
+WID = "rsmoke-000000"
+
+
+def _effects_path(store_dir: str) -> str:
+    return os.path.join(store_dir, "effects.log")
+
+
+def _mark(store_dir: str, stage: str) -> None:
+    with open(_effects_path(store_dir), "a") as f:
+        f.write(stage + "\n")
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def build_spec(store_dir: str):
+    from repro.core import subgraph as sg
+
+    spec = sg.WorkflowSpec("rsmoke")
+    spec.function(
+        "a", "aws/lambda",
+        workload=lambda e: (_mark(store_dir, "a"), {"v": e["v"] * 2})[1])
+    spec.function(
+        "b", "aliyun/fc", sleep_ms=SLEEP_MS,
+        workload=lambda e: (_mark(store_dir, "b"), {"v": e["v"] + 10})[1])
+    spec.sequence("a", "b")
+    return spec
+
+
+def _kill_policy(ex, effect):
+    """SIGKILL the worker process claiming stage b, once, at its Sleep."""
+    from repro.backends import shim
+
+    if (ex.record.function == "b" and type(effect) is shim.Sleep
+            and ex.runner.chaos_once("smoke-kill")):
+        return "kill"
+    return False
+
+
+def worker(store_dir: str) -> int:
+    """Internal: the coordinator the gate SIGKILLs mid-suspension."""
+    from repro.backends.remote import RemoteRunner
+    from repro.core.workflow import deploy
+
+    runner = RemoteRunner(store_dir=store_dir, lease_ms=LEASE_MS,
+                          retry_backoff_ms=25.0)
+    dep = deploy(runner, build_spec(store_dir), durable=True)
+    runner.crash_policy = _kill_policy
+    dep.start({"v": INPUT_V}, workflow_id=WID)
+    runner.run(timeout_s=WALL_BUDGET_S)      # killed long before this returns
+    return 0
+
+
+def _registered_pids(store_dir: str) -> dict:
+    path = os.path.join(store_dir, "workers.json")
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        return json.load(f)
+
+
+def _sigkill(pid: int) -> None:
+    try:
+        os.kill(pid, signal.SIGKILL)
+    except ProcessLookupError:
+        pass
+
+
+def gate() -> int:
+    import tempfile
+
+    from repro.backends.remote import RemoteRunner
+    from repro.core.workflow import deploy
+
+    t0 = time.monotonic()
+    with tempfile.TemporaryDirectory(prefix="remote-chaos-") as store_dir:
+        proc = subprocess.Popen(
+            [sys.executable, os.path.abspath(__file__), "--worker", store_dir],
+            env={**os.environ,
+                 "PYTHONPATH": os.path.join(_ROOT, "src")})
+        try:
+            effects = _effects_path(store_dir)
+            while not os.path.exists(effects):
+                if proc.poll() is not None:
+                    print("FAIL: coordinator exited before any effect")
+                    return 1
+                if time.monotonic() - t0 > WALL_BUDGET_S:
+                    print("FAIL: stage a's effect never landed")
+                    return 1
+                time.sleep(0.05)
+            # stage a is done; give b time to be claimed, chaos-killed, and
+            # redelivered, then take down the whole first life mid-flight
+            time.sleep(KILL_GRACE_S)
+        finally:
+            pids = _registered_pids(store_dir)
+            if proc.poll() is None:
+                proc.send_signal(signal.SIGKILL)
+            proc.wait()
+            # forked daemon workers outlive a SIGKILLed parent (atexit never
+            # ran) and would keep serving the store: kill the registry
+            for pid in pids.values():
+                _sigkill(pid)
+        print(f"killed coordinator pid={proc.pid} and workers "
+              f"{sorted(pids)} (t={time.monotonic() - t0:.2f}s)")
+
+        # fresh pool over the same store: replay + resume
+        runner = RemoteRunner(store_dir=store_dir)
+        dep = deploy(runner, build_spec(store_dir), durable=True)
+        fids = dep.resume()
+        if not fids:
+            print("FAIL: resume() found nothing to rehydrate")
+            return 1
+        runner.run(timeout_s=WALL_BUDGET_S)
+        runner.close()
+
+        result = dep.result_of(WID, "b")
+        with open(effects) as f:
+            lines = [ln.strip() for ln in f if ln.strip()]
+        elapsed = time.monotonic() - t0
+
+        ok = True
+        if result != EXPECT_B:
+            print(f"FAIL: final result {result!r} != uninterrupted "
+                  f"reference {EXPECT_B!r}")
+            ok = False
+        if sorted(lines) != ["a", "b"]:
+            print(f"FAIL: duplicate or missing side effects: {lines!r} "
+                  f"(each stage must run exactly once across kills + resume)")
+            ok = False
+        if elapsed > WALL_BUDGET_S:
+            print(f"FAIL: gate took {elapsed:.1f}s > budget {WALL_BUDGET_S}s")
+            ok = False
+        if not ok:
+            return 1
+        print(f"remote chaos smoke OK: resumed {fids}, result {result}, "
+              f"side effects {lines} (exactly once), wall {elapsed:.2f}s")
+        return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--worker", metavar="STORE_DIR", default=None,
+                    help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    if args.worker:
+        return worker(args.worker)
+    return gate()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

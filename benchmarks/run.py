@@ -8,6 +8,9 @@
     python benchmarks/run.py --backend local --open-loop [--smoke]
                                                   # Poisson arrivals on the
                                                   #   local backend, wall-clock
+    python benchmarks/run.py --backend remote [--smoke]  # value-level workflows
+                                                  #   on the multi-process
+                                                  #   distributed substrate
 
 The default (sim) mode prints a ``name,us_per_call,derived`` CSV line per
 measurement plus the human-readable summaries each module emits; the
@@ -25,6 +28,14 @@ time are submitted here through the identical ``submit(t=)`` contract and
 honored as wall-clock delays — overlapping workflow instances contend on
 real threads.  Its ``--smoke`` variant is a CI gate: all arrivals must
 complete with zero drops inside a wall budget.
+
+The remote mode (``--backend remote``) drives *value-level* workflows (no
+JAX in the forked workers — the pool inherits the parent image by ``fork``,
+and jitted callables don't survive that) through the same ``deploy`` path
+on :class:`repro.backends.remote.RemoteRunner`: per-cloud worker process
+groups, a broker queue with visibility timeouts, and WAL-backed shared
+stores.  Chaos coverage for that substrate lives in
+``benchmarks/remote_chaos_smoke.py``.
 """
 
 from __future__ import annotations
@@ -134,6 +145,77 @@ def run_local_open_loop(args) -> int:
     return 0
 
 
+REMOTE_WORKFLOWS = ("diamond", "pipeline")
+
+
+def _remote_specs(names):
+    """Value-level paper shapes for the multi-process substrate: pure-python
+    user functions only, safe to run in ``fork``'d workers."""
+    from repro.backends.shim import Workload
+    from repro.core.subgraph import WorkflowSpec
+
+    def diamond():
+        spec = WorkflowSpec("r-diamond", gc=False)
+        spec.function("a", "aws/lambda", workload=Workload(fn=lambda x: x))
+        for i, f in enumerate(["b", "c", "d"]):
+            spec.function(f, "aliyun/fc" if i % 2 else "aws/lambda",
+                          workload=Workload(fn=lambda x, i=i: x + i))
+        spec.function("agg", "aliyun/fc",
+                      workload=Workload(fn=lambda xs: sum(xs)))
+        spec.fanout("a", ["b", "c", "d"])
+        spec.fanin(["b", "c", "d"], "agg")
+        return spec, "agg", lambda v: 3 * v + 3
+
+    def pipeline():
+        spec = WorkflowSpec("r-pipe", gc=True)
+        spec.function("a", "aws/lambda", workload=Workload(fn=lambda x: x + 1))
+        spec.function("b", "aliyun/fc", workload=Workload(fn=lambda x: x * 2))
+        spec.function("c", "aws/lambda", workload=Workload(fn=lambda x: x - 3))
+        spec.sequence("a", "b")
+        spec.sequence("b", "c")
+        return spec, "c", lambda v: (v + 1) * 2 - 3
+
+    builders = {"diamond": diamond, "pipeline": pipeline}
+    return [(n, builders[n]()) for n in names]
+
+
+def run_remote(args) -> int:
+    """Paper-shaped value-level workflows end-to-end on the distributed
+    multi-process substrate; non-zero exit on wrong results, drops, or
+    (``--smoke``) a blown wall budget."""
+    from repro.backends.remote import RemoteRunner
+    from repro.core import workflow as wf
+
+    names = REMOTE_WORKFLOWS[:1] if args.smoke else REMOTE_WORKFLOWS
+    n = 1 if args.smoke else args.n
+    failures = 0
+    t0 = time.time()
+    for name, (spec, terminal, expect) in _remote_specs(names):
+        runner = RemoteRunner(poll_ms=5.0)
+        try:
+            dep = wf.deploy(runner, spec)
+            wids = [dep.start(i) for i in range(n)]
+            ms = runner.run(timeout_s=args.budget_s)
+            done = sum(1 for i, w in enumerate(wids)
+                       if dep.result_of(w, terminal) == expect(i))
+            drops = runner.drop_count
+        finally:
+            runner.close()
+        ok = done == n and drops == 0
+        failures += 0 if ok else 1
+        print(f"remote,{name},wall_ms={ms:.0f},runs={done}/{n},"
+              f"drops={drops},{'ok' if ok else 'FAIL'}")
+    wall = time.time() - t0
+    if args.smoke and wall > args.budget_s:
+        print(f"[smoke] FAIL: wall {wall:.1f}s exceeds budget "
+              f"{args.budget_s:.0f}s")
+        return 1
+    verdict = "OK" if failures == 0 else f"{failures} FAILURES"
+    print(f"remote backend {'smoke ' if args.smoke else ''}done in "
+          f"{wall:.1f}s: {verdict}")
+    return 1 if failures else 0
+
+
 def run_sim() -> int:
     failures = 0
     modules = [
@@ -173,14 +255,18 @@ def run_sim() -> int:
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--backend", choices=("sim", "local"), default="sim",
+    ap.add_argument("--backend", choices=("sim", "local", "remote"),
+                    default="sim",
                     help="sim: full figure/table aggregation on SimCloud; "
                          "local: the 4 paper workflows on the concurrent "
-                         "real-execution backend")
+                         "real-execution backend; remote: value-level "
+                         "workflows on the multi-process distributed "
+                         "substrate")
     ap.add_argument("--smoke", action="store_true",
-                    help="(local) CI gate: one workflow, wall budget, zero drops")
+                    help="(local/remote) CI gate: one workflow, wall budget, "
+                         "zero drops")
     ap.add_argument("--n", type=int, default=3,
-                    help="(local) instances per workflow")
+                    help="(local/remote) instances per workflow")
     ap.add_argument("--budget-s", type=float, default=SMOKE_WALL_BUDGET_S,
                     help="(local) wall-clock budget per run() / smoke total")
     ap.add_argument("--open-loop", action="store_true",
@@ -195,6 +281,10 @@ def main(argv=None) -> int:
         if args.open_loop:
             return run_local_open_loop(args)
         return run_local(args)
+    if args.backend == "remote":
+        if args.open_loop:
+            ap.error("--open-loop is a local-backend mode")
+        return run_remote(args)
     if args.open_loop:
         ap.error("--open-loop requires --backend local (the sim arm lives "
                  "in benchmarks/throughput_sweep.py)")

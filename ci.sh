@@ -32,4 +32,11 @@ if [ "$#" -eq 0 ]; then
     # runner over the same WAL store — identical final results, zero
     # duplicate side effects
     python benchmarks/durability_smoke.py
+    # remote-backend gate: value-level workflows end-to-end on the
+    # multi-process distributed substrate (wall budget, zero drops)
+    python benchmarks/run.py --backend remote --smoke
+    # remote chaos gate: kill -9 a worker mid-attempt and the whole pool
+    # mid-suspension, resume a fresh pool over the same store — identical
+    # final result, zero duplicate side effects
+    python benchmarks/remote_chaos_smoke.py
 fi

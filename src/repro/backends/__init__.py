@@ -10,6 +10,9 @@ Exposes:
   * ``calibration`` — every latency & price constant, sourced from the paper
   * ``localjax``    — concurrent real-execution backend (workflow nodes run
                       as JAX calls on per-FaaS worker pools)
+  * ``remote``      — distributed multi-process substrate (per-cloud forked
+                      worker pools, broker queue with lease/visibility-timeout
+                      redelivery, WAL-backed shared stores)
 """
 
 from repro.backends import calibration, shim  # noqa: F401

@@ -19,9 +19,16 @@ import copy
 import io
 import os
 import pickle
+import threading
 from bisect import bisect_left, insort
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+try:                        # POSIX-only; the remote substrate requires it
+    import fcntl
+except ImportError:         # pragma: no cover - non-POSIX fallback
+    fcntl = None
 
 # Isolation copies (puts/gets copy the value so callers can't alias store
 # state).  ``copy.deepcopy`` is the semantic model but far too slow for the
@@ -77,6 +84,20 @@ class TableState:
         self.items[key] = _copy_value(value)
         insort(self._sorted_keys, key)
         return True
+
+    def put(self, key: str, value: Any) -> None:
+        """Unconditional last-writer-wins set.
+
+        NOT part of the Table-2 workflow surface (workflow state must go
+        through the conditional primitives above for §4.1 exactly-once);
+        this exists for backend-internal namespaces — broker leases,
+        execution records, counters — that live in the same linearizable
+        store but are mutable by design.
+        """
+        self.writes += 1
+        if key not in self.items:
+            insort(self._sorted_keys, key)
+        self.items[key] = _copy_value(value)
 
     def get(self, key: str) -> Any:
         """Strongly-consistent read (returns an isolated copy; None if absent)."""
@@ -211,8 +232,99 @@ def incomplete_starts(state: TableState) -> List[Tuple[str, Any]]:
 
 
 # ==========================================================================
+# Cross-process file lock (flock-based)
+# ==========================================================================
+
+
+class FileLock:
+    """A re-entrant cross-process mutex over ``fcntl.flock``.
+
+    Design points that matter for the remote substrate:
+
+    * the lock file is opened **per acquisition** (never cached), so a
+      forked child does not share a parent's open file description — each
+      process's lock is independent;
+    * ``flock`` locks die with the process, so a ``kill -9`` mid-critical-
+      section can never wedge the store (this is what makes lease expiry,
+      not lock recovery, the failure-handling story);
+    * a ``threading.RLock`` fronts the flock so threads inside one process
+      (LocalRunner-style ``Parallel`` workers, submit timers) serialize
+      correctly too — flock alone is per-process, not per-thread.
+    """
+
+    def __init__(self, path: str):
+        if fcntl is None:  # pragma: no cover - non-POSIX
+            raise RuntimeError("FileLock requires fcntl (POSIX)")
+        self.path = path
+        self._tlock = threading.RLock()
+        self._depth = 0
+        self._fh: Optional[io.FileIO] = None
+
+    def acquire(self) -> None:
+        self._tlock.acquire()
+        self._depth += 1
+        if self._depth == 1:
+            fh = open(self.path, "ab")
+            try:
+                fcntl.flock(fh.fileno(), fcntl.LOCK_EX)
+            except BaseException:
+                fh.close()
+                self._tlock.release()
+                self._depth -= 1
+                raise
+            self._fh = fh
+
+    def release(self) -> None:
+        if self._depth == 1 and self._fh is not None:
+            try:
+                fcntl.flock(self._fh.fileno(), fcntl.LOCK_UN)
+            finally:
+                self._fh.close()
+                self._fh = None
+        self._depth -= 1
+        self._tlock.release()
+
+    def __enter__(self) -> "FileLock":
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def reset_after_fork(self) -> None:
+        """Discard inherited thread-lock state in a freshly forked child.
+
+        If the parent forked while another of its threads held the lock,
+        the child's copy would be locked forever (the owning thread does
+        not exist in the child).  Children call this before first use."""
+        self._tlock = threading.RLock()
+        self._depth = 0
+        self._fh = None
+
+
+def lock_path(store_dir: str, table_name: str) -> str:
+    """Canonical lock file guarding a table's WAL (``<wal>.lock``)."""
+    return wal_path(store_dir, table_name) + ".lock"
+
+
+# ==========================================================================
 # Write-ahead-logged table: TableState that survives process death
 # ==========================================================================
+
+
+def _apply_logged_op(state: TableState, op: Tuple) -> None:
+    """Apply one WAL record to ``state`` via the un-logged base primitives."""
+    tag = op[0]
+    if tag == "c":
+        TableState.create_if_absent(state, op[1], op[2])
+    elif tag == "a":
+        TableState.append_and_get_list(state, op[1], op[2])
+    elif tag == "b":
+        TableState.update_bitmap(state, op[2], op[1])
+    elif tag == "d":
+        TableState.delete(state, op[1])
+    elif tag == "p":
+        TableState.put(state, op[1], op[2])
 
 
 class PersistentTableState(TableState):
@@ -227,16 +339,27 @@ class PersistentTableState(TableState):
     speed.  A torn tail record (the process died mid-append) is tolerated:
     replay stops at the last complete record and the file is truncated
     back to it.
+
+    Replay and append both run under a cross-process :class:`FileLock`
+    (``<path>.lock``) so two processes sharing one WAL cannot interleave
+    half-written records or truncate a tail another writer is extending.
+    The flock makes the *file* safe under concurrent writers, but each
+    ``PersistentTableState`` still only sees its own mutations — its
+    in-memory view is single-logical-writer.  For a genuinely shared
+    multi-writer view use :class:`SharedTableState`.
     """
 
     def __init__(self, name: str, path: str):
         super().__init__(name)
         self.path = path
         self._log: Optional[io.BufferedWriter] = None
-        self._replay()
+        self._flock = FileLock(path + ".lock")
+        with self._flock:
+            self._replay()
         self._log = open(path, "ab")
 
     def _replay(self) -> None:
+        """Rebuild state from the WAL. Caller must hold ``self._flock``."""
         if not os.path.exists(self.path):
             return
         good = 0
@@ -256,20 +379,13 @@ class PersistentTableState(TableState):
                 f.truncate(good)
 
     def _apply_op(self, op: Tuple) -> None:
-        tag = op[0]
-        if tag == "c":
-            TableState.create_if_absent(self, op[1], op[2])
-        elif tag == "a":
-            TableState.append_and_get_list(self, op[1], op[2])
-        elif tag == "b":
-            TableState.update_bitmap(self, op[2], op[1])
-        elif tag == "d":
-            TableState.delete(self, op[1])
+        _apply_logged_op(self, op)
 
     def _append(self, op: Tuple) -> None:
         if self._log is not None:
-            pickle.dump(op, self._log)
-            self._log.flush()
+            with self._flock:
+                pickle.dump(op, self._log)
+                self._log.flush()
 
     # -- logged mutations ----------------------------------------------------
 
@@ -294,6 +410,10 @@ class PersistentTableState(TableState):
         self._append(("d", list(keys)))
         return n
 
+    def put(self, key: str, value: Any) -> None:
+        super().put(key, value)
+        self._append(("p", key, value))
+
     def close(self) -> None:
         if self._log is not None:
             self._log.flush()
@@ -304,6 +424,161 @@ class PersistentTableState(TableState):
 def wal_path(store_dir: str, table_name: str) -> str:
     """Canonical WAL file for a table id (``aws/dynamodb`` → ``aws__dynamodb.wal``)."""
     return os.path.join(store_dir, table_name.replace("/", "__") + ".wal")
+
+
+# ==========================================================================
+# Shared multi-writer table: the remote substrate's linearizable store
+# ==========================================================================
+
+
+class SharedTableState(TableState):
+    """A WAL-backed :class:`TableState` safe for **concurrent writers in
+    multiple processes**.
+
+    The WAL file is the single source of truth; each process keeps a local
+    materialized view plus ``_pos``, the byte offset up to which it has
+    applied the log.  Every operation runs as::
+
+        with flock(<path>.lock):          # cross-process + cross-thread
+            catch up: pickle.load new records from _pos, apply, advance
+            (truncate a torn tail back to the last whole record)
+            perform the op on the in-memory view
+            append its WAL record, flush; _pos = tell()
+
+    Because catch-up and append happen under one exclusive lock session,
+    every operation observes *all* previously committed operations from
+    every process — the table is linearizable: the WAL order is the single
+    total order, and each op is atomic at its append point.  ``flock``
+    locks evaporate on process death, so a worker killed mid-section
+    leaves at most a torn tail, which the next writer truncates.
+
+    ``locked()`` is public: backends compose several primitives into one
+    atomic step (the broker's claim-scan-lease sequence) by holding the
+    session open across them.
+    """
+
+    def __init__(self, name: str, path: str):
+        super().__init__(name)
+        self.path = path
+        self._pos = 0
+        self._lock = FileLock(path + ".lock")
+        with self.locked():
+            pass                        # initial catch-up
+
+    # -- lock session --------------------------------------------------------
+
+    @contextmanager
+    def locked(self):
+        """Exclusive cross-process session; syncs to WAL tip on entry.
+
+        Re-entrant: nested ``locked()`` (or primitive calls inside one)
+        reuse the held session and skip the redundant re-sync."""
+        self._lock.acquire()
+        try:
+            if self._lock._depth == 1:
+                self._sync_locked()
+            yield self
+        finally:
+            self._lock.release()
+
+    def sync(self) -> None:
+        """Catch the local view up to the WAL tip (read-your-writes for
+        other processes' commits)."""
+        with self.locked():
+            pass
+
+    def reset_after_fork(self) -> None:
+        """Make a forked child's copy safe to use: drop inherited lock
+        state and rebuild the view from the WAL from scratch (the parent
+        may have forked mid-mutation in another thread)."""
+        self._lock.reset_after_fork()
+        self.items = {}
+        self._sorted_keys = []
+        self._pos = 0
+
+    def _sync_locked(self) -> None:
+        if not os.path.exists(self.path):
+            return
+        size = os.path.getsize(self.path)
+        if size == self._pos:
+            return
+        if size < self._pos:            # WAL replaced/truncated under us
+            self.items = {}
+            self._sorted_keys = []
+            self._pos = 0
+        good = self._pos
+        with open(self.path, "rb") as f:
+            f.seek(self._pos)
+            while True:
+                try:
+                    op = pickle.load(f)
+                except EOFError:
+                    break
+                except Exception:      # torn tail from a killed writer
+                    break
+                _apply_logged_op(self, op)
+                good = f.tell()
+        if good != size:
+            with open(self.path, "ab") as f:
+                f.truncate(good)
+        self._pos = good
+
+    def _append(self, op: Tuple) -> None:
+        with open(self.path, "ab") as f:
+            pickle.dump(op, f)
+            f.flush()
+            self._pos = f.tell()
+
+    # -- primitives: each is one atomic WAL-ordered step ---------------------
+
+    def create_if_absent(self, key: str, value: Any) -> bool:
+        with self.locked():
+            created = super().create_if_absent(key, value)
+            if created:
+                self._append(("c", key, value))
+            return created
+
+    def get(self, key: str) -> Any:
+        with self.locked():
+            return super().get(key)
+
+    def append_and_get_list(self, key: str, items: Sequence[Any]) -> List[Any]:
+        with self.locked():
+            out = super().append_and_get_list(key, items)
+            self._append(("a", key, list(items)))
+            return out
+
+    def update_bitmap(self, index: int, key: str) -> List[bool]:
+        with self.locked():
+            out = super().update_bitmap(index, key)
+            self._append(("b", key, index))
+            return out
+
+    def list_prefix(self, prefix: str) -> List[str]:
+        with self.locked():
+            return super().list_prefix(prefix)
+
+    def delete(self, keys: Sequence[str]) -> int:
+        with self.locked():
+            n = super().delete(keys)
+            self._append(("d", list(keys)))
+            return n
+
+    def put(self, key: str, value: Any) -> None:
+        with self.locked():
+            super().put(key, value)
+            self._append(("p", key, value))
+
+    # -- bulk reads (record-query surface) ------------------------------------
+
+    def items_prefix(self, prefix: str) -> List[Tuple[str, Any]]:
+        """All ``(key, value)`` pairs under ``prefix`` in one lock session."""
+        with self.locked():
+            return [(k, _copy_value(self.items[k]))
+                    for k in TableState.list_prefix(self, prefix)]
+
+    def close(self) -> None:
+        pass                            # nothing cached between sessions
 
 
 class InMemoryDS:

@@ -1,7 +1,19 @@
-"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
-see the real single CPU device; only launch/dryrun.py forces 512."""
+"""Shared fixtures + the cross-substrate workflow zoo.
+
+NOTE: no XLA_FLAGS here — smoke tests and benches must see the real single
+CPU device; only launch/dryrun.py forces 512.
+
+Everything below the fixtures is the conformance toolkit shared by the
+three-substrate suites (``test_backend_parity.py``, ``test_durable.py``,
+``test_prefetch.py``, ``test_exactly_once*.py``): one builder per
+invocation-primitive family, one substrate factory, and a file-backed
+side-effect log that survives ``fork`` + ``kill -9`` (the remote pool runs
+user functions in worker *processes*, so an in-memory ``calls.append`` list
+never makes it back to the test process).
+"""
 
 import os
+import pickle
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -9,7 +21,189 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 import pytest
 
+from repro.backends import shim
+from repro.backends.localjax import LocalRunner
+from repro.backends.remote import RemoteRunner
+from repro.backends.simcloud import SimCloud, Workload
+from repro.core.subgraph import WorkflowSpec
+
 
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+AWS = "aws/lambda"
+ALI = "aliyun/fc"
+
+#: The full parity axis.  Every conformance test that claims substrate
+#: blindness parametrizes over this tuple so failures name the substrate
+#: in the test id.
+SUBSTRATES = ("sim", "local", "remote")
+
+
+# ---- workflow zoo (one builder per invocation-primitive family) -------------
+#
+# Each builder returns ``(spec, input_value, terminal_function, expected)``.
+
+
+def seq_spec():
+    spec = WorkflowSpec("p-seq", gc=True)
+    spec.function("a", AWS, workload=Workload(fn=lambda x: x + 1))
+    spec.function("b", ALI, workload=Workload(fn=lambda x: x * 2))
+    spec.sequence("a", "b")
+    return spec, 3, "b", 8
+
+
+def diamond_spec():
+    spec = WorkflowSpec("p-diamond", gc=False)
+    spec.function("a", AWS, workload=Workload(fn=lambda x: x))
+    for i, f in enumerate(["b", "c", "d"]):
+        spec.function(f, ALI if i % 2 else AWS,
+                      workload=Workload(fn=lambda x, i=i: x + i))
+    spec.function("agg", ALI, workload=Workload(fn=lambda xs: sorted(xs)))
+    spec.fanout("a", ["b", "c", "d"])
+    spec.fanin(["b", "c", "d"], "agg")
+    return spec, 10, "agg", [10, 11, 12]
+
+
+def map_spec():
+    spec = WorkflowSpec("p-map", gc=False)
+    spec.function("split", AWS, workload=Workload(fn=lambda n: list(range(n))))
+    spec.function("work", ALI, workload=Workload(fn=lambda x: x * x))
+    spec.function("agg", AWS, workload=Workload(fn=sum))
+    spec.map("split", "work")
+    spec.fanin(["work"], "agg")
+    return spec, 6, "agg", sum(i * i for i in range(6))
+
+
+def loop_spec():
+    spec = WorkflowSpec("p-loop", gc=False)
+    spec.function("inc", AWS, workload=Workload(fn=lambda x: x + 1))
+    spec.function("even", ALI, workload=Workload(fn=lambda x: ("even", x)))
+    spec.function("odd", ALI, workload=Workload(fn=lambda x: ("odd", x)))
+    spec.cycle("inc", "inc", while_pred=lambda x: x < 5)
+    spec.choice("inc", [(lambda x: x % 2 == 0, "even"), (None, "odd")])
+    return spec, 0, "odd", ("odd", 5)
+
+
+def redundant_spec():
+    spec = WorkflowSpec("p-red", gc=False)
+    spec.function("a", AWS, workload=Workload(fn=lambda x: x))
+    spec.function("b", ALI, workload=Workload(fn=lambda x: x * 10))
+    spec.function("c", AWS, workload=Workload(fn=lambda x: x))
+    spec.redundant("a", "b", replicas=[ALI, AWS])
+    spec.sequence("b", "c")
+    return spec, 4, "c", 40
+
+
+CASES = {
+    "sequence": seq_spec,
+    "diamond": diamond_spec,
+    "map": map_spec,
+    "cycle_choice": loop_spec,
+    "redundant": redundant_spec,
+}
+
+
+def two_stage_spec(calls, *, sleep_ms=0.0, wait_signal="", failover=()):
+    """a (×2) → b (+10); b's user executions are counted in ``calls``
+    (any object with ``.append`` — a list, or a :class:`FileCalls` when b
+    runs in another process)."""
+    spec = WorkflowSpec("dur", gc=False)
+    spec.function("a", AWS, workload=Workload(fn=lambda e: e * 2))
+    spec.function("b", ALI, failover=list(failover), sleep_ms=sleep_ms,
+                  wait_signal=wait_signal,
+                  workload=Workload(fn=lambda e: calls.append(e) or e + 10))
+    spec.sequence("a", "b")
+    return spec
+
+
+def prefetch_fanin_spec():
+    """A shape where prefetch directives actually arm: big predictable
+    fan-in reads with the datastore in the producers' cloud and the
+    aggregator across."""
+    spec = WorkflowSpec("p-pf", gc=False)
+    spec.function("s", AWS,
+                  workload=Workload(out_bytes=64, fn=lambda x: x))
+    for p in ("p1", "p2", "p3"):
+        spec.function(p, AWS, workload=Workload(
+            out_bytes=3_500_000,
+            fn=lambda x: shim.Blob(3_500_000, "t")))
+    spec.function("agg", ALI, workload=Workload(
+        out_bytes=8, fn=lambda xs: len(xs)))
+    spec.fanout("s", ["p1", "p2", "p3"])
+    spec.fanin(["p1", "p2", "p3"], "agg")
+    return spec, 1, "agg", 3
+
+
+# ---- substrate factory ------------------------------------------------------
+
+
+def make_backend(kind: str, **kw):
+    """One backend per substrate name, uniform across the parity axis.
+
+    Remote defaults are tuned for tests: 2 worker processes per cloud and a
+    short poll.  Callers that create a ``remote`` backend own its store
+    directory — ``close_backend`` (or ``backend.close()``) reclaims it.
+    """
+    if kind == "sim":
+        return SimCloud(seed=kw.pop("seed", 0), **kw)
+    if kind == "local":
+        return LocalRunner(**kw)
+    if kind == "remote":
+        kw.setdefault("poll_ms", 5.0)
+        return RemoteRunner(**kw)
+    raise ValueError(f"unknown substrate {kind!r}")
+
+
+def run_backend(backend, timeout_s: float = 60.0):
+    """Drive any substrate to quiescence (virtual time on SimCloud, wall
+    clock elsewhere)."""
+    if isinstance(backend, SimCloud):
+        return backend.run()
+    return backend.run(timeout_s=timeout_s)
+
+
+def close_backend(backend):
+    close = getattr(backend, "close", None)
+    if close is not None:
+        close()
+
+
+# ---- cross-process side-effect log ------------------------------------------
+
+
+class FileCalls:
+    """Append-only, fsync'd, file-backed list with the ``.append`` shape the
+    zoo builders expect.  Appends from forked worker processes (and from
+    attempts that are later ``kill -9``'d) are durable and visible to the
+    test process — the ground truth the exactly-once chaos suites count."""
+
+    def __init__(self, path):
+        self.path = str(path)
+        open(self.path, "ab").close()
+
+    def append(self, value):
+        with open(self.path, "ab") as f:
+            pickle.dump(value, f)
+            f.flush()
+            os.fsync(f.fileno())
+
+    def values(self):
+        out = []
+        with open(self.path, "rb") as f:
+            while True:
+                try:
+                    out.append(pickle.load(f))
+                except EOFError:
+                    return out
+
+    def count(self, value):
+        return self.values().count(value)
+
+    def __len__(self):
+        return len(self.values())
+
+    def __repr__(self):
+        return f"FileCalls({self.values()!r})"

@@ -1,143 +1,125 @@
 """Unified Backend API: the same WorkflowSpec deploys through the one
-``core.workflow.deploy`` path on SimCloud *and* the concurrent LocalRunner,
-and produces the same execution sets and results — semantic parity, not
-timing parity (the Backend-Shim portability claim, paper §3.2 / Table 2).
+``core.workflow.deploy`` path on SimCloud, the concurrent LocalRunner *and*
+the multi-process RemoteRunner, and produces the same execution sets and
+results — semantic parity, not timing parity (the Backend-Shim portability
+claim, paper §3.2 / Table 2).
+
+This module is the conformance contract for the substrate axis: every
+parity test parametrizes over ``conftest.SUBSTRATES`` (or compares a
+substrate against the cached SimCloud reference), so a failing substrate is
+named in the test id.  Any future real cloud adapter must pass this suite
+unchanged.
 """
 
 import math
+import os
 from collections import Counter
 
 import pytest
 
 from repro.backends import shim
 from repro.backends.localjax import LocalRunner, deploy_local
-from repro.backends.simcloud import SimCloud, Workload
+from repro.backends.remote import RemoteRunner, deploy_remote
+from repro.backends.simcloud import SimCloud
 from repro.core import workflow as wf
-from repro.core.subgraph import WorkflowSpec
 
-AWS = "aws/lambda"
-ALI = "aliyun/fc"
-
-
-# ---- workflow zoo (one builder per invocation-primitive family) -------------
-
-
-def seq_spec():
-    spec = WorkflowSpec("p-seq", gc=True)
-    spec.function("a", AWS, workload=Workload(fn=lambda x: x + 1))
-    spec.function("b", ALI, workload=Workload(fn=lambda x: x * 2))
-    spec.sequence("a", "b")
-    return spec, 3, "b", 8
-
-
-def diamond_spec():
-    spec = WorkflowSpec("p-diamond", gc=False)
-    spec.function("a", AWS, workload=Workload(fn=lambda x: x))
-    for i, f in enumerate(["b", "c", "d"]):
-        spec.function(f, ALI if i % 2 else AWS,
-                      workload=Workload(fn=lambda x, i=i: x + i))
-    spec.function("agg", ALI, workload=Workload(fn=lambda xs: sorted(xs)))
-    spec.fanout("a", ["b", "c", "d"])
-    spec.fanin(["b", "c", "d"], "agg")
-    return spec, 10, "agg", [10, 11, 12]
-
-
-def map_spec():
-    spec = WorkflowSpec("p-map", gc=False)
-    spec.function("split", AWS, workload=Workload(fn=lambda n: list(range(n))))
-    spec.function("work", ALI, workload=Workload(fn=lambda x: x * x))
-    spec.function("agg", AWS, workload=Workload(fn=sum))
-    spec.map("split", "work")
-    spec.fanin(["work"], "agg")
-    return spec, 6, "agg", sum(i * i for i in range(6))
-
-
-def loop_spec():
-    spec = WorkflowSpec("p-loop", gc=False)
-    spec.function("inc", AWS, workload=Workload(fn=lambda x: x + 1))
-    spec.function("even", ALI, workload=Workload(fn=lambda x: ("even", x)))
-    spec.function("odd", ALI, workload=Workload(fn=lambda x: ("odd", x)))
-    spec.cycle("inc", "inc", while_pred=lambda x: x < 5)
-    spec.choice("inc", [(lambda x: x % 2 == 0, "even"), (None, "odd")])
-    return spec, 0, "odd", ("odd", 5)
-
-
-def redundant_spec():
-    spec = WorkflowSpec("p-red", gc=False)
-    spec.function("a", AWS, workload=Workload(fn=lambda x: x))
-    spec.function("b", ALI, workload=Workload(fn=lambda x: x * 10))
-    spec.function("c", AWS, workload=Workload(fn=lambda x: x))
-    spec.redundant("a", "b", replicas=[ALI, AWS])
-    spec.sequence("b", "c")
-    return spec, 4, "c", 40
-
-
-CASES = {
-    "sequence": seq_spec,
-    "diamond": diamond_spec,
-    "map": map_spec,
-    "cycle_choice": loop_spec,
-    "redundant": redundant_spec,
-}
+from conftest import (ALI, AWS, CASES, SUBSTRATES, FileCalls, close_backend,
+                      make_backend, map_spec, prefetch_fanin_spec,
+                      run_backend, seq_spec, two_stage_spec)
 
 
 def _run_on(kind: str, build, **deploy_kw):
+    """Run one zoo case to quiescence on ``kind`` and return a backend-free
+    summary (the backend is closed before returning, so remote temp stores
+    never leak)."""
     spec, input_value, terminal, expected = build()
-    backend = SimCloud(seed=0) if kind == "sim" else LocalRunner()
-    dep = wf.deploy(backend, spec, **deploy_kw)
-    wid = dep.start(input_value)
-    if kind == "sim":
-        backend.run()
-    else:
-        backend.run(timeout_s=60.0)
-    done = Counter(r.function for r in dep.executions(wid)
-                   if r.status == "done")
-    return {
-        "backend": backend,
-        "dep": dep,
-        "wid": wid,
-        "done": done,
-        "result": dep.result_of(wid, terminal),
-        "expected": expected,
-        "makespan": dep.makespan_ms(wid),
-    }
+    backend = make_backend(kind)
+    try:
+        dep = wf.deploy(backend, spec, **deploy_kw)
+        wid = dep.start(input_value)
+        run_backend(backend)
+        done = Counter(r.function for r in dep.executions(wid)
+                       if r.status == "done")
+        return {
+            "done": done,
+            "result": dep.result_of(wid, terminal),
+            "expected": expected,
+            "makespan": dep.makespan_ms(wid),
+            "dropped": len(backend.dropped),
+        }
+    finally:
+        close_backend(backend)
+
+
+_SIM_REF = {}
+
+
+def _sim_reference(case: str, **deploy_kw):
+    key = (case, tuple(sorted(deploy_kw.items())))
+    if key not in _SIM_REF:
+        _SIM_REF[key] = _run_on("sim", CASES[case], **deploy_kw)
+    return _SIM_REF[key]
 
 
 # ---- the parity suite ------------------------------------------------------
 
 
+@pytest.mark.parametrize("kind", [s for s in SUBSTRATES if s != "sim"])
 @pytest.mark.parametrize("case", sorted(CASES))
-def test_same_spec_same_semantics_on_both_backends(case):
-    sim = _run_on("sim", CASES[case])
-    loc = _run_on("local", CASES[case])
+def test_same_spec_same_semantics_on_every_backend(case, kind):
+    sim = _sim_reference(case)
+    out = _run_on(kind, CASES[case])
     # identical execution sets (which functions completed, how many times)
-    assert sim["done"] == loc["done"], (sim["done"], loc["done"])
+    assert sim["done"] == out["done"], (sim["done"], out["done"])
     # identical terminal values through result_of
     assert sim["result"] == sim["expected"]
-    assert loc["result"] == loc["expected"]
+    assert out["result"] == out["expected"]
     # finite makespans on both substrates (virtual vs wall — only finiteness
     # and positivity are comparable)
     assert math.isfinite(sim["makespan"]) and sim["makespan"] > 0
-    assert math.isfinite(loc["makespan"]) and loc["makespan"] > 0
+    assert math.isfinite(out["makespan"]) and out["makespan"] > 0
     # zero drops on a healthy run, both sides
-    assert not sim["backend"].dropped
-    assert not loc["backend"].dropped
+    assert not sim["dropped"]
+    assert not out["dropped"]
 
 
-def test_both_backends_satisfy_the_protocol():
-    assert isinstance(SimCloud(), shim.Backend)
-    assert isinstance(LocalRunner(), shim.Backend)
+def test_every_backend_satisfies_the_protocol():
+    for kind in SUBSTRATES:
+        backend = make_backend(kind)
+        try:
+            assert isinstance(backend, shim.Backend), kind
+        finally:
+            close_backend(backend)
 
 
 def test_catalogs_agree_on_substrate_shape():
-    """Both backends derive their Catalog from the same config, including
+    """All backends derive their Catalog from the same config, including
     the cheapest-flavor GC-host rule."""
-    sim_cat = SimCloud().catalog()
-    loc_cat = LocalRunner().catalog()
-    assert sim_cat.tables == loc_cat.tables
-    assert sim_cat.objects == loc_cat.objects
-    assert sim_cat.quotas == loc_cat.quotas
-    assert sim_cat.gc_faas == loc_cat.gc_faas
+    ref = SimCloud().catalog()
+    for kind in ("local", "remote"):
+        backend = make_backend(kind)
+        try:
+            cat = backend.catalog()
+            assert cat.tables == ref.tables, kind
+            assert cat.objects == ref.objects, kind
+            assert cat.quotas == ref.quotas, kind
+            assert cat.gc_faas == ref.gc_faas, kind
+        finally:
+            close_backend(backend)
+
+
+def test_remote_capability_matrix():
+    """The remote substrate's capability surface is exactly as documented:
+    ``journal`` and ``signal`` are real, everything else is *absent* (so
+    generic probes degrade to CapabilityError, never AttributeError)."""
+    backend = make_backend("remote")
+    try:
+        assert callable(getattr(backend, "journal", None))
+        assert callable(getattr(backend, "signal", None))
+        for cap in ("topology", "faas", "after", "prefetch", "bill"):
+            assert getattr(backend, cap, None) is None, cap
+    finally:
+        close_backend(backend)
 
 
 def test_deploy_local_is_a_thin_alias_of_unified_deploy():
@@ -157,37 +139,64 @@ def test_deploy_local_is_a_thin_alias_of_unified_deploy():
             if r.status == "done"} == {"a", "b"}
 
 
-def test_record_query_surface_parity():
-    """executions_of / completed serve the same views on both backends."""
-    for kind in ("sim", "local"):
-        out = _run_on(kind, map_spec)
-        backend = out["backend"]
+def test_deploy_remote_is_a_thin_alias_of_unified_deploy():
+    spec, input_value, terminal, expected = seq_spec()
+    runner = make_backend("remote")
+    try:
+        dep = deploy_remote(runner, spec)
+        assert isinstance(dep, wf.DeployedWorkflow)
+        assert dep.backend is runner
+        wid = dep.start(input_value)
+        runner.run(timeout_s=60.0)
+        assert dep.result_of(wid, terminal) == expected
+        assert math.isfinite(dep.makespan_ms(wid))
+        assert {r.function for r in dep.executions(wid)
+                if r.status == "done"} == {"a", "b"}
+    finally:
+        close_backend(runner)
+
+
+@pytest.mark.parametrize("kind", SUBSTRATES)
+def test_record_query_surface_parity(kind):
+    """executions_of / completed serve the same views on every backend."""
+    spec, input_value, terminal, expected = map_spec()
+    backend = make_backend(kind)
+    try:
+        dep = wf.deploy(backend, spec)
+        dep.start(input_value)
+        run_backend(backend)
         works = backend.executions_of("work")
         assert len([r for r in works if r.status == "done"]) == 6
         completed = backend.completed()
         assert [r.exec_id for r in completed] == sorted(
             r.exec_id for r in completed)
         assert {r.function for r in completed} >= {"split", "work", "agg"}
+    finally:
+        close_backend(backend)
 
 
-def test_replan_degrades_gracefully_without_topology():
+@pytest.mark.parametrize("kind", ["local", "remote"])
+def test_replan_degrades_gracefully_without_topology(kind):
     """A backend without a network model must yield a clear CapabilityError
     from replan(), never an AttributeError (the capability-probe rule)."""
     spec, input_value, terminal, _ = seq_spec()
-    runner = LocalRunner()
-    dep = wf.deploy(runner, spec)
-    wid = dep.start(input_value)
-    runner.run(timeout_s=60.0)
-    with pytest.raises(shim.CapabilityError, match="topology"):
-        dep.replan(excluded_clouds=["aliyun"])
-    # ... and the deployment keeps serving results after the refused replan
-    assert dep.result_of(wid, terminal) is not None
+    backend = make_backend(kind)
+    try:
+        dep = wf.deploy(backend, spec)
+        wid = dep.start(input_value)
+        run_backend(backend, timeout_s=60.0)
+        with pytest.raises(shim.CapabilityError, match="topology"):
+            dep.replan(excluded_clouds=["aliyun"])
+        # ... and the deployment keeps serving results after the refusal
+        assert dep.result_of(wid, terminal) is not None
+    finally:
+        close_backend(backend)
 
 
-def test_submit_delay_contract_on_both_backends():
+def test_submit_delay_contract_on_sim():
     """submit(t=) is a *delay* on every backend (virtual ms on SimCloud,
-    wall ms on LocalRunner): honored relative to the backend's clock, and
-    negative values rejected loudly — never clamped or ignored."""
+    wall ms on the executing backends): honored relative to the backend's
+    clock, and negative values rejected loudly — never clamped or ignored."""
     spec, input_value, terminal, expected = seq_spec()
     sim = SimCloud(seed=0)
     dep = wf.deploy(sim, spec)
@@ -203,50 +212,99 @@ def test_submit_delay_contract_on_both_backends():
         sim.submit(AWS, "a", {"workflow_id": "neg", "input": 0}, t=-1.0)
 
 
-def test_learn_profiles_works_on_local_records():
-    """The trace-calibration loop is backend-agnostic: wall-clock local
-    records feed EdgeProfiles just like virtual-clock SimCloud ones."""
-    out = _run_on("local", seq_spec)
-    profiles = out["dep"].learn_profiles()
-    assert profiles.nodes["a"].samples >= 1
-    assert profiles.nodes["b"].out_bytes > 0
+def test_submit_delay_contract_on_remote():
+    """The same contract on the remote pool: the delay gates the message's
+    ``not_before``, so no worker may *claim* it earlier (wall clock)."""
+    import time
+
+    spec, input_value, terminal, expected = seq_spec()
+    backend = make_backend("remote")
+    try:
+        dep = wf.deploy(backend, spec)
+        t0 = time.time() * 1e3
+        wid = dep.start(input_value, t=300.0)
+        backend.run(timeout_s=60.0)
+        assert dep.result_of(wid, terminal) == expected
+        first = min(r.t_start for r in dep.executions(wid))
+        assert first >= t0 + 300.0
+        with pytest.raises(ValueError):
+            backend.submit(AWS, "a", {"workflow_id": "neg", "input": 0},
+                           t=-1.0)
+    finally:
+        close_backend(backend)
+
+
+@pytest.mark.parametrize("kind", ["local", "remote"])
+def test_learn_profiles_capability_contract(kind):
+    """The trace-calibration loop is backend-agnostic where the ``faas``
+    capability exists (wall-clock local records feed EdgeProfiles just like
+    virtual-clock SimCloud ones) and degrades to a clear CapabilityError
+    naming the capability where it doesn't (the remote pool)."""
+    spec, input_value, terminal, expected = seq_spec()
+    backend = make_backend(kind)
+    try:
+        dep = wf.deploy(backend, spec)
+        dep.start(input_value)
+        run_backend(backend, timeout_s=60.0)
+        if kind == "remote":
+            with pytest.raises(shim.CapabilityError, match="faas"):
+                dep.learn_profiles()
+        else:
+            profiles = dep.learn_profiles()
+            assert profiles.nodes["a"].samples >= 1
+            assert profiles.nodes["b"].out_bytes > 0
+    finally:
+        close_backend(backend)
 
 
 # ---- durable execution: journal round-trip parity --------------------------
 #
 # deploy(durable=True) + kill + fresh-backend resume() must behave the same
-# on both substrates: the journal is plain datastore state, so recovery is
-# substrate-blind.  (SimCloud dies via an unrecoverable outage; LocalRunner
-# via a crash policy that exhausts the retry budget.  The real-SIGKILL
-# variant is the `benchmarks/durability_smoke.py` CI gate.)
+# on all three substrates: the journal is plain datastore state, so recovery
+# is substrate-blind.  (SimCloud dies via an unrecoverable outage;
+# LocalRunner and RemoteRunner via a crash policy that exhausts the retry
+# budget.  The real-SIGKILL variants are `benchmarks/durability_smoke.py`
+# and `benchmarks/remote_chaos_smoke.py`, plus the deterministic windows in
+# `tests/test_exactly_once.py`.)
 
 
-def durable_seq_spec(calls):
-    spec = WorkflowSpec("p-dur", gc=False)
-    spec.function("a", AWS, workload=Workload(fn=lambda x: x + 1))
-    spec.function("b", ALI,
-                  workload=Workload(fn=lambda x: calls.append(x) or x * 2))
-    spec.sequence("a", "b")
-    return spec
+def _durable_calls(kind, tmp_path):
+    """Side-effect log: in-memory for single-process substrates, file-backed
+    for the remote pool (worker processes cannot append to our list)."""
+    if kind == "remote":
+        return FileCalls(os.path.join(str(tmp_path), "calls.log"))
+    return []
+
+
+def _calls_values(calls):
+    return calls.values() if isinstance(calls, FileCalls) else calls
 
 
 def _interrupted_durable_run(kind, calls):
     """Start a durable run and kill it mid-flight; return (backend, wid)."""
+    crash_b = (lambda ex, eff:
+               ex.record.function == "b" and ex.effect_index >= 4)
     if kind == "sim":
         backend = SimCloud(seed=0)
-        dep = wf.deploy(backend, durable_seq_spec(calls), durable=True)
+        dep = wf.deploy(backend, two_stage_spec(calls), durable=True)
         backend.schedule_outage("aliyun", 5.0, float("inf"))
         wid = dep.start(3)
         backend.run()
-    else:
+    elif kind == "local":
         backend = LocalRunner(concurrency=2, max_requeues=1,
                               retry_backoff_ms=5.0)
-        dep = wf.deploy(backend, durable_seq_spec(calls), durable=True)
-        backend.crash_policy = (lambda ex, eff:
-                                ex.record.function == "b"
-                                and ex.effect_index >= 4)
-        wid = dep.start(3, workflow_id="p-dur-000000")
+        dep = wf.deploy(backend, two_stage_spec(calls), durable=True)
+        backend.crash_policy = crash_b
+        wid = dep.start(3, workflow_id="dur-000000")
         backend.run(timeout_s=30.0)
+        backend.crash_policy = None
+    else:
+        backend = make_backend("remote", max_requeues=1,
+                               retry_backoff_ms=5.0)
+        dep = wf.deploy(backend, two_stage_spec(calls), durable=True)
+        backend.crash_policy = crash_b       # snapshotted at worker fork
+        wid = dep.start(3, workflow_id="dur-000000")
+        backend.run(timeout_s=60.0)
         backend.crash_policy = None
     assert backend.dropped, "the interruption must exhaust the retry budget"
     assert dep.result_of(wid, "b") is None
@@ -254,137 +312,125 @@ def _interrupted_durable_run(kind, calls):
 
 
 def _fresh_over_same_stores(kind, old):
-    backend = SimCloud(seed=1) if kind == "sim" else LocalRunner(concurrency=2)
-    backend.adopt_stores(old)
+    if kind == "sim":
+        backend = SimCloud(seed=1)
+        backend.adopt_stores(old)
+    elif kind == "local":
+        backend = LocalRunner(concurrency=2)
+        backend.adopt_stores(old)
+    else:
+        # the remote recovery idiom is a fresh pool over the same on-disk
+        # store directory — nothing in-process survives on purpose
+        backend = RemoteRunner(store_dir=old.store_dir)
     return backend
 
 
-@pytest.mark.parametrize("kind", ["sim", "local"])
-def test_journal_round_trip_resumes_identically(kind):
+@pytest.mark.parametrize("kind", SUBSTRATES)
+def test_journal_round_trip_resumes_identically(kind, tmp_path):
     """Interrupt → fresh backend over the same stores → resume(): the same
-    recovery idiom completes the workflow on either substrate, exactly-once."""
-    calls = []
+    recovery idiom completes the workflow on every substrate, exactly-once."""
+    calls = _durable_calls(kind, tmp_path)
     old, wid = _interrupted_durable_run(kind, calls)
     fresh = _fresh_over_same_stores(kind, old)
-    dep = wf.deploy(fresh, durable_seq_spec(calls), durable=True)
+    dep = wf.deploy(fresh, two_stage_spec(calls), durable=True)
     fids = dep.resume()
     assert fids and all(f.startswith(wid + "/") for f in fids), fids
-    if kind == "sim":
-        fresh.run()
-    else:
-        fresh.run(timeout_s=30.0)
-        fresh.close()
-    assert dep.result_of(wid, "b") == 8
-    assert calls == [4], "user function ran exactly once across both lives"
+    run_backend(fresh, timeout_s=60.0)
+    assert dep.result_of(wid, "b") == 16
+    assert _calls_values(calls) == [6], \
+        "user function ran exactly once across both lives"
     # second-generation resume: the journal is closed, nothing left
     third = _fresh_over_same_stores(kind, fresh)
-    dep3 = wf.deploy(third, durable_seq_spec(calls), durable=True)
+    dep3 = wf.deploy(third, two_stage_spec(calls), durable=True)
     assert dep3.resume() == []
+    for backend in (third, fresh, old):
+        close_backend(backend)
+
+
+@pytest.mark.parametrize("kind", SUBSTRATES)
+def test_completed_durable_run_has_nothing_to_resume(kind, tmp_path):
+    """A durable run that finishes cleanly leaves a closed journal: resume()
+    on a fresh backend over the same stores is a no-op on every substrate."""
+    calls = _durable_calls(kind, tmp_path)
+    backend = make_backend(kind) if kind != "local" \
+        else LocalRunner(concurrency=2)
+    dep = wf.deploy(backend, two_stage_spec(calls), durable=True)
+    wid = dep.start(3)
+    run_backend(backend, timeout_s=60.0)
+    assert dep.result_of(wid, "b") == 16
+    assert _calls_values(calls) == [6]
+    fresh = _fresh_over_same_stores(kind, backend)
+    dep2 = wf.deploy(fresh, two_stage_spec(calls), durable=True)
+    assert dep2.resume() == []
+    close_backend(fresh)
+    close_backend(backend)
+
+
+@pytest.mark.parametrize("kind", SUBSTRATES)
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_durable_mode_preserves_parity_semantics(case, kind):
+    """The whole workflow zoo still satisfies the parity contract with
+    journaling on: same results, zero drops on every substrate — the
+    journal must be an invisible layer on a healthy run."""
+    out = _run_on(kind, CASES[case], durable=True)
+    assert out["result"] == out["expected"], kind
+    assert not out["dropped"], kind
+
+
+# ---- speculative pre-fetching: the capability-gated parity axis -------------
+#
+# Prefetch is deliberately *absent* on the remote substrate, so its parity
+# axis is sim/local plus the probe test below.
 
 
 @pytest.mark.parametrize("kind", ["sim", "local"])
-def test_completed_durable_run_has_nothing_to_resume(kind):
-    """A durable run that finishes cleanly leaves a closed journal: resume()
-    on a fresh backend over the same stores is a no-op on both substrates."""
-    calls = []
-    if kind == "sim":
-        backend = SimCloud(seed=0)
-        dep = wf.deploy(backend, durable_seq_spec(calls), durable=True)
-        wid = dep.start(3)
-        backend.run()
-    else:
-        backend = LocalRunner(concurrency=2)
-        dep = wf.deploy(backend, durable_seq_spec(calls), durable=True)
-        wid = dep.start(3)
-        backend.run(timeout_s=30.0)
-    assert dep.result_of(wid, "b") == 8
-    assert calls == [4]
-    fresh = _fresh_over_same_stores(kind, backend)
-    dep2 = wf.deploy(fresh, durable_seq_spec(calls), durable=True)
-    assert dep2.resume() == []
-
-
 @pytest.mark.parametrize("case", sorted(CASES))
-def test_durable_mode_preserves_parity_semantics(case):
-    """The whole workflow zoo still satisfies the parity contract with
-    journaling on: same done-sets, same results, zero drops — the journal
-    must be an invisible layer on a healthy run."""
-    spec, input_value, terminal, expected = CASES[case]()
-    for kind in ("sim", "local"):
-        backend = SimCloud(seed=0) if kind == "sim" else LocalRunner()
-        dep = wf.deploy(backend, spec, durable=True)
-        wid = dep.start(input_value)
-        if kind == "sim":
-            backend.run()
-        else:
-            backend.run(timeout_s=60.0)
-        assert dep.result_of(wid, terminal) == expected, kind
-        assert not backend.dropped, kind
-
-
-# ---- speculative pre-fetching: the third capability-gated parity axis -------
-
-
-@pytest.mark.parametrize("case", sorted(CASES))
-def test_prefetch_mode_preserves_parity_semantics(case):
+def test_prefetch_mode_preserves_parity_semantics(case, kind):
     """The whole workflow zoo with speculative pre-fetching on: same
-    results, zero drops on both substrates — prefetch must be a pure
-    latency optimization, invisible to workflow semantics."""
-    spec, input_value, terminal, expected = CASES[case]()
-    for kind in ("sim", "local"):
-        backend = SimCloud(seed=0) if kind == "sim" else LocalRunner()
-        dep = wf.deploy(backend, spec, prefetch=True)
-        wid = dep.start(input_value)
-        if kind == "sim":
-            backend.run()
-        else:
-            backend.run(timeout_s=60.0)
-        assert dep.result_of(wid, terminal) == expected, kind
-        assert not backend.dropped, kind
-
-
-def prefetch_fanin_spec():
-    """A shape where directives actually arm: big predictable fan-in reads
-    with the datastore in the producers' cloud and the aggregator across."""
-    spec = WorkflowSpec("p-pf", gc=False)
-    spec.function("s", AWS,
-                  workload=Workload(out_bytes=64, fn=lambda x: x))
-    for p in ("p1", "p2", "p3"):
-        spec.function(p, AWS, workload=Workload(
-            out_bytes=3_500_000,
-            fn=lambda x: shim.Blob(3_500_000, "t")))
-    spec.function("agg", ALI, workload=Workload(
-        out_bytes=8, fn=lambda xs: len(xs)))
-    spec.fanout("s", ["p1", "p2", "p3"])
-    spec.fanin(["p1", "p2", "p3"], "agg")
-    return spec, 1, "agg", 3
+    results, zero drops — prefetch must be a pure latency optimization,
+    invisible to workflow semantics."""
+    out = _run_on(kind, CASES[case], prefetch=True)
+    assert out["result"] == out["expected"], kind
+    assert not out["dropped"], kind
 
 
 def test_prefetch_armed_parity_on_fanin():
     """With directives genuinely armed (not just the capability on), both
-    backends still produce identical execution sets and results."""
+    prefetch-capable backends still produce identical execution sets and
+    results."""
     sim = _run_on("sim", prefetch_fanin_spec, prefetch=True)
     loc = _run_on("local", prefetch_fanin_spec, prefetch=True)
     assert sim["done"] == loc["done"], (sim["done"], loc["done"])
     assert sim["result"] == sim["expected"]
     assert loc["result"] == loc["expected"]
-    assert not sim["backend"].dropped and not loc["backend"].dropped
+    assert not sim["dropped"] and not loc["dropped"]
 
 
 def test_prefetch_capability_probe_is_uniform():
-    """Both substrates expose the capability attribute; a disabled local
-    runner degrades to CapabilityError at deploy time, not mid-run."""
+    """Prefetch-capable substrates expose the capability attribute; a
+    disabled local runner and the remote pool both degrade to
+    CapabilityError at deploy time, not mid-run."""
     assert SimCloud().prefetch and LocalRunner().prefetch
     spec, _, _, _ = prefetch_fanin_spec()
     with pytest.raises(shim.CapabilityError, match="prefetch"):
         wf.deploy(LocalRunner(prefetch=False), spec, prefetch=True)
+    remote = make_backend("remote")
+    try:
+        with pytest.raises(shim.CapabilityError, match="prefetch"):
+            wf.deploy(remote, spec, prefetch=True)
+    finally:
+        close_backend(remote)
 
 
 def test_legacy_sim_alias_still_points_at_backend():
     """`DeployedWorkflow.sim` predates the Backend protocol; it must remain
     a pure alias of `.backend` on every substrate (guard for the sweep that
     moved all call sites onto `.backend`)."""
-    for backend in (SimCloud(seed=0), LocalRunner()):
-        spec, _, _, _ = seq_spec()
-        dep = wf.deploy(backend, spec)
-        assert dep.sim is dep.backend is backend
+    for kind in SUBSTRATES:
+        backend = make_backend(kind)
+        try:
+            spec, _, _, _ = seq_spec()
+            dep = wf.deploy(backend, spec)
+            assert dep.sim is dep.backend is backend
+        finally:
+            close_backend(backend)

@@ -18,6 +18,7 @@ The kill -9 variant of the recovery path is the CI gate
 ``tests/test_exactly_once_prop.py``.
 """
 
+import os
 import time
 from collections import Counter
 
@@ -31,19 +32,8 @@ from repro.core import workflow as wf
 from repro.core.orchestrator import gc_handler
 from repro.core.subgraph import WorkflowSpec
 
-AWS = "aws/lambda"
-ALI = "aliyun/fc"
-
-
-def two_stage_spec(calls, *, sleep_ms=0.0, wait_signal="", failover=()):
-    """a (×2) → b (+10); b's user executions are counted in ``calls``."""
-    spec = WorkflowSpec("dur", gc=False)
-    spec.function("a", AWS, workload=Workload(fn=lambda e: e * 2))
-    spec.function("b", ALI, failover=list(failover), sleep_ms=sleep_ms,
-                  wait_signal=wait_signal,
-                  workload=Workload(fn=lambda e: calls.append(e) or e + 10))
-    spec.sequence("a", "b")
-    return spec
+from conftest import (ALI, AWS, FileCalls, close_backend, make_backend,
+                      two_stage_spec)
 
 
 # ==========================================================================
@@ -224,6 +214,83 @@ def test_local_signal_latch_survives_process_boundary(tmp_path):
 
 
 # ==========================================================================
+# RemoteRunner: suspension across worker *processes*, durable latches
+# ==========================================================================
+
+
+def test_remote_sleep_parks_without_worker_or_lease(tmp_path):
+    """A remote Sleep holds no worker process and no lease: the parked
+    state is an acked message plus a not-yet-due wake message in the shared
+    broker, so the residual sleep is honored in wall-clock time and the
+    user function still runs exactly once."""
+    calls = FileCalls(os.path.join(str(tmp_path), "calls.log"))
+    backend = make_backend("remote")
+    try:
+        dep = wf.deploy(backend, two_stage_spec(calls, sleep_ms=350.0),
+                        durable=True)
+        wid = dep.start(3, workflow_id="rslp-000000")
+        elapsed_ms = backend.run(timeout_s=60.0)
+        assert dep.result_of(wid, "b") == 16
+        assert calls.values() == [6]
+        assert elapsed_ms >= 300.0, "the sleep must be honored, not skipped"
+        assert any(r.status == "suspended"
+                   for r in backend.executions_of("b"))
+    finally:
+        close_backend(backend)
+
+
+def test_remote_wait_signal_parks_and_latch_is_first_wins(tmp_path):
+    """A remote signal wait parks with *no* pending delivery: run() returns
+    with the workflow suspended (exactly like SimCloud), the durable latch
+    makes the parked message claimable, and the first delivery wins."""
+    calls = FileCalls(os.path.join(str(tmp_path), "calls.log"))
+    backend = make_backend("remote")
+    try:
+        dep = wf.deploy(backend, two_stage_spec(calls, wait_signal="go"),
+                        durable=True)
+        wid = dep.start(30, workflow_id="rsig-000000")
+        backend.run(timeout_s=60.0)
+        assert dep.result_of(wid, "b") is None    # suspended, not failed
+        assert any(r.status == "suspended"
+                   for r in backend.executions_of("b"))
+        assert not backend.dropped
+
+        dep.signal(wid, "go")
+        dep.signal(wid, "go", value="late loser")  # first delivery wins
+        backend.run(timeout_s=60.0)
+        assert dep.result_of(wid, "b") == 70
+        assert calls.values() == [60]
+    finally:
+        close_backend(backend)
+
+
+def test_remote_signal_latch_survives_the_whole_pool(tmp_path):
+    """Signal delivered while no pool is alive, then a *fresh* runner over
+    the same store: the WAL-persisted latch lets the parked waiter complete
+    — the remote analogue of the LocalRunner process-boundary test."""
+    calls = FileCalls(os.path.join(str(tmp_path), "calls.log"))
+    old = make_backend("remote")
+    try:
+        dep1 = wf.deploy(old, two_stage_spec(calls, wait_signal="go"),
+                         durable=True)
+        wid = dep1.start(5, workflow_id="rlat-000000")
+        old.run(timeout_s=60.0)                    # returns parked
+        dep1.signal(wid, "go")                     # latch lands in the WAL
+
+        fresh = make_backend("remote", store_dir=old.store_dir)
+        try:
+            dep2 = wf.deploy(fresh, two_stage_spec(calls, wait_signal="go"),
+                             durable=True)
+            fresh.run(timeout_s=60.0)
+            assert dep2.result_of(wid, "b") == 20
+            assert calls.values() == [10]
+        finally:
+            close_backend(fresh)
+    finally:
+        close_backend(old)
+
+
+# ==========================================================================
 # Capability probes, Parallel guard, GC awareness
 # ==========================================================================
 
@@ -247,23 +314,29 @@ def test_signal_without_capability_is_a_clear_error():
         dep.signal("w", "go")
 
 
-@pytest.mark.parametrize("kind", ["sim", "local"])
+@pytest.mark.parametrize("kind", ["sim", "local", "remote"])
 def test_suspension_inside_parallel_is_rejected(kind):
     """Suspension is attempt-granular: Sleep/WaitForSignal inside Parallel
     must fail loudly on every backend, not strand sibling branches."""
-    backend = SimCloud(seed=0) if kind == "sim" else LocalRunner(max_requeues=0)
+    backend = make_backend(kind, **({} if kind == "sim"
+                                    else {"max_requeues": 0}))
 
     def handler(event):
         yield shim.Parallel([shim.Sleep(5.0), shim.Now()])
 
-    backend.deploy(shim.Deployment(function="bad", faas=AWS, handler=handler,
-                                   workload=shim.Workload()))
-    backend.submit(AWS, "bad", {"workflow_id": "p", "input": 0})
-    if kind == "sim":
-        backend.run()
-    else:
-        backend.run(timeout_s=30.0)
-    assert not any(r.status == "done" for r in backend.executions_of("bad"))
+    try:
+        backend.deploy(shim.Deployment(function="bad", faas=AWS,
+                                       handler=handler,
+                                       workload=shim.Workload()))
+        backend.submit(AWS, "bad", {"workflow_id": "p", "input": 0})
+        if kind == "sim":
+            backend.run()
+        else:
+            backend.run(timeout_s=30.0)
+        assert not any(r.status == "done"
+                       for r in backend.executions_of("bad"))
+    finally:
+        close_backend(backend)
 
 
 def _drive_gc(state: TableState, prefix: str):

@@ -9,15 +9,17 @@ hypothesis is not installed).
 """
 
 import itertools
+import os
 
 import pytest
 
+from repro.backends import shim
 from repro.backends.simcloud import SimCloud, Workload
 from repro.core import workflow as wf
 from repro.core.subgraph import WorkflowSpec
 
-AWS = "aws/lambda"
-ALI = "aliyun/fc"
+from conftest import (ALI, AWS, FileCalls, close_backend, make_backend,
+                      two_stage_spec)
 
 # Each user function records its (unique id, input) — duplicate *effects*
 # with the same id are allowed (retries), but downstream values must be
@@ -208,3 +210,132 @@ def test_extreme_duplicate_invocation_scenario():
     b_outs = [s.state.get(k) for s in sim.stores.values()
               for k in s.state.items if "/b_" in k and k.endswith("-output")]
     assert len(b_outs) == 1 and b_outs[0] == {"v": 4}
+
+
+# ==========================================================================
+# Remote pool: real kill -9 of worker *processes* (deterministic windows)
+# ==========================================================================
+#
+# These are the tier-1 smoke versions of the randomized SIGKILL properties
+# in test_exactly_once_prop.py: one worker process self-SIGKILLs (a genuine
+# process death — no atexit, no flush hooks) at a chosen window of the
+# journal protocol, the lease's visibility timeout expires, and a surviving
+# worker of the same cloud re-claims the delivery.  The §4.1 invariants
+# must hold across a *process* boundary, not just a thread's.
+
+
+def _kill_window_policy(window: str, tag: str):
+    """SIGKILL the executing worker exactly once (cross-process ``tag``
+    latch) at a chosen window of stage b's attempt:
+
+    * ``pre``     — when *offered* a ``#j/e`` journal commit: the live
+      effect ran but its result was never committed, so replay re-runs it;
+    * ``post``    — on the first effect *after* a committed journal entry:
+      replay must suppress everything up to the commit;
+    * ``suspend`` — when offered the ``Sleep`` effect: the attempt dies on
+      the brink of parking, redelivery replays to the suspension point.
+    """
+    state = {"armed": False}
+
+    def crash(ex, effect):
+        if ex.record.function != "b":
+            return False
+        is_commit = (type(effect) is shim.DsCreate and "#j/e" in effect.key)
+        if window == "pre":
+            fire = is_commit
+        elif window == "post":
+            fire = state["armed"] and not is_commit
+            state["armed"] = is_commit
+        else:                                   # "suspend"
+            fire = type(effect) is shim.Sleep
+        if fire and ex.runner.chaos_once(tag):
+            return "kill"                       # os.kill(getpid(), SIGKILL)
+        return False
+
+    return crash
+
+
+@pytest.mark.parametrize("window", ["pre", "post", "suspend"])
+def test_remote_sigkill_window_runs_to_completion_exactly_once(
+        window, tmp_path):
+    """kill -9 a worker process at each adversarial window of a *durable*
+    attempt: the pool recovers via lease expiry and the run completes with
+    the side-effect log exactly-once (all three windows land before stage
+    b's user function, so even the user-code layer is exactly-once here;
+    the legitimate duplicate window is covered below)."""
+    calls = FileCalls(os.path.join(str(tmp_path), "calls.log"))
+    backend = make_backend("remote", lease_ms=1200.0, retry_backoff_ms=25.0)
+    try:
+        sleep_ms = 400.0 if window == "suspend" else 0.0
+        dep = wf.deploy(backend, two_stage_spec(calls, sleep_ms=sleep_ms),
+                        durable=True)
+        backend.crash_policy = _kill_window_policy(window, f"kill-{window}")
+        wid = dep.start(3, workflow_id=f"eo-{window}-000000")
+        backend.run(timeout_s=90.0)
+        assert dep.result_of(wid, "b") == 16
+        assert calls.values() == [6], \
+            f"user function must run exactly once across the kill ({window})"
+        assert not backend.dropped
+        b_done = [r for r in backend.executions_of("b")
+                  if r.status == "done"]
+        assert len(b_done) == 1 and b_done[0].result == 16
+    finally:
+        close_backend(backend)
+
+
+def test_remote_sigkill_before_output_commit_is_data_exactly_once(tmp_path):
+    """The §4.1.2 extreme on a real process: kill -9 between stage b's user
+    execution and its output checkpoint (non-durable, so redelivery restarts
+    the handler from the top).  The user function legitimately re-runs —
+    at-least-once — but the conditional-create data layer stays
+    single-valued and the workflow result is unaffected."""
+    calls = FileCalls(os.path.join(str(tmp_path), "calls.log"))
+    backend = make_backend("remote", lease_ms=1200.0, retry_backoff_ms=25.0)
+    try:
+        dep = wf.deploy(backend, two_stage_spec(calls))
+
+        def crash(ex, effect):
+            if (ex.record.function == "b"
+                    and type(effect) is shim.DsCreate
+                    and effect.key.endswith("-output")
+                    and ex.runner.chaos_once("kill-output")):
+                return "kill"
+            return False
+
+        backend.crash_policy = crash
+        wid = dep.start(3, workflow_id="eo-out-000000")
+        backend.run(timeout_s=90.0)
+        assert dep.result_of(wid, "b") == 16
+        assert calls.count(6) == 2, \
+            "the pre-checkpoint kill must force one legitimate re-execution"
+        for st in backend.stores.values():
+            st.sync()
+        b_outs = [st.get(k) for st in backend.stores.values()
+                  for k in st.items if "/b_" in k and k.endswith("-output")]
+        assert b_outs == [{"v": 16}], \
+            "duplicates must collapse on the output checkpoint"
+    finally:
+        close_backend(backend)
+
+
+def test_remote_requeue_budget_exhaustion_drops_loudly(tmp_path):
+    """A delivery whose every attempt crashes must exhaust the requeue
+    budget into a *visible* drop (``dropped`` + a "dropped" record), never
+    hang or vanish — and the crash-before-user-code window means the
+    side-effect log stays empty."""
+    calls = FileCalls(os.path.join(str(tmp_path), "calls.log"))
+    backend = make_backend("remote", max_requeues=1, retry_backoff_ms=10.0)
+    try:
+        dep = wf.deploy(backend, two_stage_spec(calls))
+        backend.crash_policy = (lambda ex, eff:
+                                ex.record.function == "b")
+        wid = dep.start(3, workflow_id="eo-drop-000000")
+        backend.run(timeout_s=60.0)
+        assert dep.result_of(wid, "b") is None
+        assert backend.drop_count == 1
+        assert [(f, fn) for f, fn, _ in backend.dropped] == [(ALI, "b")]
+        assert any(r.status == "dropped"
+                   for r in backend.executions_of("b"))
+        assert len(calls) == 0
+    finally:
+        close_backend(backend)

@@ -339,3 +339,94 @@ def test_durable_crash_mid_sleep_recovers(sleep_ms, outage_len, seed):
     b_outs = [s.state.get(k) for s in sim.stores.values()
               for k in s.state.items if "/b_" in k and k.endswith("-output")]
     assert b_outs == [{"v": 16}]
+
+
+# ==========================================================================
+# Remote pool: randomized kill -9 schedules over real worker processes
+# ==========================================================================
+#
+# The remote substrate runs user functions in forked worker processes, so
+# these properties exercise §4.1 against *real* process death: the crash
+# policy's "kill" verdict SIGKILLs the worker mid-attempt and recovery is
+# lease expiry + redelivery, not an in-process retry loop.  Crash policies
+# execute inside the workers — any cross-attempt state they need must live
+# in the shared broker (``ex.runner.chaos_once``) or in the redelivered
+# message itself (``ex.record.attempt``), never in test-process closures.
+
+import os                # noqa: E402
+import tempfile          # noqa: E402
+
+from conftest import (FileCalls, close_backend, make_backend,  # noqa: E402
+                      two_stage_spec)
+from test_exactly_once import _kill_window_policy  # noqa: E402
+
+
+@settings(max_examples=6, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(
+    window=st.sampled_from(["pre", "post", "suspend"]),
+    lease_ms=st.sampled_from([700.0, 1100.0, 1500.0]),
+    value=st.integers(min_value=0, max_value=50),
+)
+def test_remote_random_sigkill_window_exactly_once(window, lease_ms, value):
+    """Randomized SIGKILL windows over a durable two-stage workflow: kill a
+    worker process before stage b's journal commit, right after it, or while
+    b is parked mid-suspension.  Whatever the (window, lease, input) draw,
+    the pool must run to completion with the fsync'd side-effect log
+    exactly-once and a single done record for b."""
+    expected = value * 2 + 10
+    with tempfile.TemporaryDirectory() as tmp:
+        calls = FileCalls(os.path.join(tmp, "calls.log"))
+        backend = make_backend("remote", lease_ms=lease_ms,
+                               retry_backoff_ms=25.0)
+        try:
+            sleep_ms = 300.0 if window == "suspend" else 0.0
+            dep = wf.deploy(backend, two_stage_spec(calls, sleep_ms=sleep_ms),
+                            durable=True)
+            backend.crash_policy = _kill_window_policy(
+                window, f"kill-{window}")
+            wid = dep.start(value, workflow_id=f"prop-{window}-000000")
+            backend.run(timeout_s=90.0)
+            assert dep.result_of(wid, "b") == expected
+            assert calls.values() == [value * 2], \
+                f"side-effect log must be exactly-once across the {window} kill"
+            assert not backend.dropped
+            b_done = [r for r in backend.executions_of("b")
+                      if r.status == "done"]
+            assert len(b_done) == 1 and b_done[0].result == expected
+        finally:
+            close_backend(backend)
+
+
+@settings(max_examples=8, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(
+    crashes=st.integers(min_value=0, max_value=2),
+    value=st.integers(min_value=0, max_value=50),
+)
+def test_remote_soft_crash_schedule_exactly_once(crashes, value):
+    """Randomized soft-crash schedules within the requeue budget: the first
+    ``crashes`` attempts of stage b abort before user code (the policy keys
+    on ``record.attempt`` — redelivered state, valid across processes), the
+    surviving attempt completes, and the side-effect log is exactly-once."""
+    expected = value * 2 + 10
+    with tempfile.TemporaryDirectory() as tmp:
+        calls = FileCalls(os.path.join(tmp, "calls.log"))
+        backend = make_backend("remote", max_requeues=3,
+                               retry_backoff_ms=10.0)
+        try:
+            dep = wf.deploy(backend, two_stage_spec(calls))
+            n = crashes
+            backend.crash_policy = (
+                lambda ex, eff: ex.record.function == "b"
+                and ex.record.attempt < n)
+            wid = dep.start(value, workflow_id="prop-soft-000000")
+            backend.run(timeout_s=60.0)
+            assert dep.result_of(wid, "b") == expected
+            assert calls.values() == [value * 2]
+            assert not backend.dropped
+            crashed = [r for r in backend.executions_of("b")
+                       if r.status == "crashed"]
+            assert len(crashed) == crashes
+        finally:
+            close_backend(backend)

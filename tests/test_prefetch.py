@@ -22,8 +22,8 @@ from repro.core import workflow as wf
 from repro.core.placement import plan_workflow
 from repro.core.subgraph import WorkflowSpec
 
-AWS = "aws/lambda"
-ALI = "aliyun/fc"
+from conftest import ALI, AWS
+
 GPU8 = "aliyun/fc_gpu"
 
 BIG = 3_500_000          # comfortably over every quota and the min-bytes floor
